@@ -1,0 +1,40 @@
+"""Paper Table 3: decoding speed + bits/int on ClusterData, dense
+(2^16 ints in [0, 2^19)) and sparse (2^16 ints in [0, 2^30)), for every
+codec, plus the delta entropy and a memcpy reference row."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import codecs
+from repro.data.clusterdata import clusterdata, delta_entropy
+from benchmarks.common import emit, timeit
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(1)
+    n = 1 << 16
+    names = (["bp-d1", "bp-dv", "fastpfor-d1", "varint"] if quick
+             else codecs.ALL_CODECS)
+    for label, bits in (("dense", 19), ("sparse", 30)):
+        x = clusterdata(rng, n, bits)
+        emit(f"decode/{label}/entropy", 0.0,
+             f"{delta_entropy(x):.1f} bits/int delta entropy")
+        xd = jnp.asarray(x.astype(np.int32))
+        t = timeit(lambda: xd.copy())
+        emit(f"decode/{label}/copy", t, f"{n / t / 1e9:.2f} Gints/s")
+        for name in names:
+            c = codecs.get_codec(name)
+            enc = c.encode(x)
+            if name == "varint":           # scalar host decode (paper's
+                t = timeit(lambda: c.decode(enc), reps=1)   # scalar baseline)
+            else:
+                t = timeit(lambda: c.decode(enc))
+            emit(f"decode/{label}/{name}", t,
+                 f"{n / t / 1e9:.3f} Gints/s; {c.bits_per_int(enc):.1f} "
+                 f"bits/int")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Beyond-paper benchmark: the paper's codec on the DP gradient wire
+(DESIGN.md §3.2) — compression ratio vs dense f32 all-reduce and index
+bits/coordinate across top-k densities."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.distributed import grad_compress as gc
+from benchmarks.common import emit, timeit
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(5)
+    n = 1 << 20 if not quick else 1 << 16
+    g = rng.normal(size=n).astype(np.float32) * \
+        (rng.random(n) < 0.3)                     # realistic sparsity pattern
+    res = jnp.zeros(n)
+    for frac in ([0.01] if quick else [0.001, 0.01, 0.05]):
+        k = max(int(n * frac), 1)
+        t = timeit(lambda: gc.sparsify(jnp.asarray(g), res, k))
+        idx, vals, _ = gc.sparsify(jnp.asarray(g), res, k)
+        packed, _ = gc.encode_wire(np.asarray(idx), np.asarray(vals))
+        emit(f"gradcompress/top{frac}", t,
+             f"{gc.compress_ratio(n, k, packed):.0f}x vs dense f32; "
+             f"{gc.wire_bits_per_coord(packed):.1f} bits/coord")
+
+
+if __name__ == "__main__":
+    run()

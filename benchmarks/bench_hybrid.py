@@ -1,0 +1,57 @@
+"""Paper Tables 4/5: conjunctive query time (ms/query) + index size
+(bits/int) for HYB+M2 with B ∈ {0, 8, 16, 32}, codecs × partitioned /
+unpartitioned, on the synthetic corpus fitted to Table 2 marginals.
+
+Two regimes, matching the paper: Table 5 decodes per query ("decode" rows);
+Table 4 intersects already-decoded lists — here an LRU DecodeCache
+("cached" rows), reported for B ∈ {0, 16}."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.index import builder, corpus as corpus_lib, engine
+from benchmarks.common import emit
+
+
+def run(quick: bool = False):
+    n_docs = 1 << 16 if quick else 1 << 18
+    n_q = 8 if quick else 24
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_q, seed=4)
+    codec_names = (["bp-d1", "varint"] if quick
+                   else ["varint", "fastpfor-d1", "bp-d1", "bp-d2", "bp-dm",
+                         "bp-dv"])
+    for B in [0, 8, 16, 32]:
+        for parts in ([1] if quick else [1, 4]):
+            for name in codec_names:
+                idx = builder.build(corpus.postings, corpus.n_docs,
+                                    codec_name=name, B=B, n_parts=parts)
+                # warm the jit caches on the first query
+                engine.query(idx, corpus.queries[0])
+                t0 = time.perf_counter()
+                total = 0
+                for q in corpus.queries:
+                    total += engine.query(idx, q).count
+                dt = (time.perf_counter() - t0) / len(corpus.queries)
+                st = idx.stats()
+                emit(f"hybrid/B{B}/p{parts}/{name}", dt,
+                     f"{dt * 1e3:.2f} ms/query; "
+                     f"{st['bits_per_int']:.1f} bits/int; hits {total}")
+                if B in (0, 16) and parts == 1 and name in (
+                        "fastpfor-d1", "bp-d1", "varint"):
+                    # Table 4 regime: SvS over cached decoded lists
+                    cache = engine.DecodeCache(capacity_ints=1 << 26)
+                    for q in corpus.queries:          # warm the cache
+                        engine.query(idx, q, cache=cache)
+                    t0 = time.perf_counter()
+                    for q in corpus.queries:
+                        engine.query(idx, q, cache=cache)
+                    dt = (time.perf_counter() - t0) / len(corpus.queries)
+                    emit(f"hybrid/B{B}/cached/{name}", dt,
+                         f"{dt * 1e3:.2f} ms/query (Table-4 regime)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 1a/1b: bit-unpacking speed, integrated vs two-pass (-NI)
+differential coding, for every delta mode across bit widths.
+
+Derived column: Gints/s and the integrated/NI speed ratio (Fig. 1a's y-axis).
+The paper's claim to reproduce: integration helps most for the cheap-prefix
+modes (D4/DM on SSE ↔ dv/dm here), and wider-stride modes decode faster.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bitpack
+from benchmarks.common import emit, timeit
+
+N = 1 << 18                 # 64 blocks of 4096
+
+
+def _list_with_width(rng, b: int, mode: str) -> bitpack.PackedList:
+    """Sorted list whose per-block widths are ≈b for the given mode."""
+    if b >= 30:
+        gaps = rng.integers(1 << 24, 1 << 26, size=N)
+    else:
+        lo = max((1 << b) // 256, 1)
+        gaps = rng.integers(lo, max(2 * lo, lo + 2), size=N)
+    x = np.cumsum(gaps.astype(np.int64))
+    x = x % (1 << 31)
+    x = np.sort(np.unique(x))
+    return bitpack.encode(x, mode=mode)
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    widths = [2, 8, 16] if quick else [1, 2, 4, 8, 12, 16, 20, 24]
+    for mode in ["d1", "d2", "d4", "dm", "dv"]:
+        for b in widths:
+            pl = _list_with_width(rng, b, mode)
+            bw = float(np.asarray(pl.widths).mean())
+            t_int = timeit(lambda: bitpack.decode(pl))
+            t_ni = timeit(lambda: bitpack.decode_ni(pl))
+            gints = pl.padded_n / t_int / 1e9
+            ratio = t_ni / t_int
+            emit(f"unpack/{mode}/b{b}", t_int,
+                 f"{gints:.3f} Gints/s; int/NI speedup {ratio:.2f}; "
+                 f"avg width {bw:.1f}")
+
+
+if __name__ == "__main__":
+    run()

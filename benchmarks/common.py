@@ -1,0 +1,35 @@
+"""Shared benchmark harness utilities.
+
+Timing protocol: jit-warmup call excluded, then ``reps`` timed calls with
+block_until_ready; report the best-of-3 mean (paper reports averages of
+repeated runs).  Output rows are ``name,us_per_call,derived`` CSV (derived =
+benchmark-specific figure of merit, e.g. Gints/s or bits/int).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+ROWS = []
+
+
+def timeit(fn, *args, reps: int = 5) -> float:
+    """Best-of-3 mean seconds per call."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    row = f"{name},{seconds * 1e6:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)

@@ -1,0 +1,38 @@
+"""Benchmark runner — one module per paper table/figure:
+
+  bench_unpack        Fig. 1a/1b   (integrated vs -NI unpacking, all modes)
+  bench_decode        Table 3      (ClusterData decode speed + bits/int)
+  bench_intersect     Fig. 2a/2b   (intersection speed vs cardinality ratio)
+  bench_hybrid        Tables 4/5   (HYB+M2 conjunctive queries)
+  bench_gradcompress  beyond-paper (codec on the DP gradient wire)
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` runs a reduced sweep.
+Roofline terms (§Roofline) come from the dry-run artifacts:
+  python -m repro.launch.roofline results/dryrun
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated subset, e.g. unpack,decode")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_decode, bench_gradcompress, bench_hybrid,
+                            bench_intersect, bench_unpack)
+    mods = {"unpack": bench_unpack, "decode": bench_decode,
+            "intersect": bench_intersect, "hybrid": bench_hybrid,
+            "gradcompress": bench_gradcompress}
+    subset = args.only.split(",") if args.only else list(mods)
+    print("name,us_per_call,derived")
+    for name in subset:
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        mods[name].run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

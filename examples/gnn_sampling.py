@@ -1,0 +1,48 @@
+"""GraphSAGE minibatch training over a *compressed* adjacency: CSR neighbor
+lists are sorted integer lists, stored with the paper's codec; the neighbor
+sampler runs inside the jitted train step.
+
+    PYTHONPATH=src python examples/gnn_sampling.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import graph_data
+from repro.models import gnn
+from repro.optim import adamw
+from repro.train.steps import make_gnn_train_step
+
+N, DEG = 20_000, 16
+g = graph_data.synthetic_graph(N, DEG, seed=0, d_feat=64, n_classes=16)
+print(f"graph: {N} nodes, {len(g['indices'])} edges")
+
+# adjacency compressed with the paper's codec (bp-d1 over row-offset stream)
+cc = graph_data.CompressedCSR.compress(g["indptr"], g["indices"], N)
+print(f"adjacency: {cc.bits_per_edge():.2f} bits/edge (vs 32 raw) — "
+      f"{32 / cc.bits_per_edge():.1f}x compression")
+indices = cc.decompress()                      # pipeline decodes per epoch
+assert np.array_equal(indices, g["indices"])
+
+cfg = gnn.GNNConfig(name="sage-demo", d_feat=64, n_classes=16, d_hidden=64)
+params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+opt_cfg = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0)
+step = jax.jit(make_gnn_train_step(cfg, "minibatch", opt_cfg,
+                                   fanout=(10, 5)))
+opt = adamw.init(params, opt_cfg)
+
+feats = jnp.asarray(g["x"])
+indptr = jnp.asarray(g["indptr"])
+indices_j = jnp.asarray(indices)
+labels = jnp.asarray(g["labels"])
+rng = jax.random.PRNGKey(1)
+for i in range(60):
+    rng, k1, k2 = jax.random.split(rng, 3)
+    seeds = jax.random.randint(k1, (256,), 0, N)
+    batch = {"feats": feats, "indptr": indptr, "indices": indices_j,
+             "seeds": seeds, "labels": labels[seeds]}
+    params, opt, m = step(params, opt, batch, k2)
+    if i % 15 == 0 or i == 59:
+        print(f"step {i:3d} loss {float(m['loss']):.4f}")
+print("sampled GraphSAGE training over compressed adjacency — done")

@@ -1,0 +1,56 @@
+"""Recsys retrieval with inverted-index candidate generation: user attributes
+→ compressed posting lists → SvS intersection (the paper's engine) → dense
+scoring with MIND multi-interest embeddings → top-k.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core import intersect as its
+from repro.data import recsys_data
+from repro.models import recsys
+
+rng = np.random.default_rng(7)
+N_ITEMS = 1 << 16
+
+# --- offline: per-attribute posting lists (item ids are sorted ints) -------
+# e.g. "category=c" and "brand=b" each map to a sorted item-id list
+cate_of = rng.integers(0, 64, size=N_ITEMS)
+brand_of = rng.integers(0, 128, size=N_ITEMS)
+cate_lists = {c: np.nonzero(cate_of == c)[0].astype(np.int64)
+              for c in range(64)}
+brand_lists = {b: np.nonzero(brand_of == b)[0].astype(np.int64)
+               for b in range(128)}
+packed_cate = {c: bitpack.encode(v, mode="d1") for c, v in cate_lists.items()}
+bits = np.mean([bitpack.bits_per_int(p) for p in packed_cate.values()])
+print(f"attribute posting lists compressed at {bits:.2f} bits/item")
+
+# --- online: candidate generation by intersection ---------------------------
+user_cate, user_brand = 3, 17
+r = cate_lists[user_cate]
+f = brand_lists[user_brand]
+expect = np.intersect1d(r, f)
+rp = jnp.asarray(its.pad_to(r, its.pow2_bucket(len(r))))
+fp = jnp.asarray(its.pad_to(f, its.pow2_bucket(len(f), floor=1024)))
+mask = its.intersect_auto(rp, fp, len(r), len(f))
+cands, cnt = its.compact(rp, mask)
+cands = np.asarray(cands)[: int(cnt)]
+assert np.array_equal(cands, expect)
+print(f"candidate generation: |cate|={len(r)} ∩ |brand|={len(f)} → "
+      f"{len(cands)} candidates (verified)")
+
+# --- dense scoring: MIND multi-interest --------------------------------------
+cfg = recsys.RecsysConfig(name="mind-demo", arch="mind", n_items=N_ITEMS,
+                          embed_dim=32, seq_len=32, n_neg=15)
+params = recsys.INIT["mind"](jax.random.PRNGKey(0), cfg)
+batch = recsys_data.retrieval_batch(rng, cfg, len(cands))
+batch["cand_items"] = cands.astype(np.int32)
+batch = {k: jnp.asarray(v) for k, v in batch.items()}
+scores = recsys.RETRIEVAL["mind"](params, batch, cfg)
+top_vals, top_idx = jax.lax.top_k(scores, min(10, len(cands)))
+print("top-10 item ids:", np.asarray(cands)[np.asarray(top_idx)].tolist())
+print("retrieval pipeline (intersection → multi-interest scoring) — done")

@@ -1,0 +1,43 @@
+"""END-TO-END DRIVER (the paper's kind is serving): build an inverted index
+over a synthetic corpus fitted to the paper's Table 2 query-log marginals,
+compress posting lists with S4-BP128-style codecs + HYB+M2 bitmaps, and serve
+batched conjunctive queries — results verified against a brute-force oracle.
+
+    PYTHONPATH=src python examples/search_engine.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.index import builder, corpus as corpus_lib, engine
+
+N_DOCS = 1 << 17
+N_QUERIES = 40
+
+print(f"synthesizing corpus: {N_DOCS} docs, {N_QUERIES} queries "
+      "(Table 2 marginals)...")
+corpus = corpus_lib.synthesize(n_docs=N_DOCS, n_queries=N_QUERIES, seed=11)
+sizes = [len(p) for p in corpus.postings]
+print(f"  {corpus.n_terms} terms, posting lengths "
+      f"p50={int(np.median(sizes))} max={max(sizes)}")
+
+for codec, B in [("fastpfor-d1", 0), ("bp-d1", 16), ("fastpfor-d1", 16)]:
+    idx = builder.build(corpus.postings, corpus.n_docs, codec_name=codec,
+                        B=B, n_parts=2)
+    st = idx.stats()
+    engine.query(idx, corpus.queries[0])        # warm jit buckets
+    t0 = time.perf_counter()
+    hits = 0
+    for q in corpus.queries:
+        res = engine.query(idx, q)
+        hits += res.count
+    dt = (time.perf_counter() - t0) / len(corpus.queries)
+    # verify against the oracle
+    for q in corpus.queries[:10]:
+        assert engine.query(idx, q).count == \
+            len(engine.brute_force(corpus.postings, q))
+    print(f"codec={codec:12s} B={B:2d}: {st['bits_per_int']:5.2f} bits/int, "
+          f"{dt * 1e3:7.2f} ms/query, {hits} total hits — verified ✓")
+
+print("\nServed and verified — HYB+M2 over compressed lists (paper §6.7).")

@@ -1,0 +1,67 @@
+"""Train a small LM for a few hundred steps with the full substrate:
+AdamW + cosine schedule, async atomic checkpointing, straggler-tolerant
+prefetch, and the paper's codec on the DP gradient wire (top-k sparsified
+gradient indices, delta+bit-packed).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.lm_data import TokenStream, make_shuffle_index
+from repro.distributed import grad_compress as gc
+from repro.core import bitpack
+from repro.models.transformer import LMConfig, init_params
+from repro.optim import adamw
+from repro.train.steps import make_lm_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+args = ap.parse_args()
+
+cfg = LMConfig(name="lm-demo", n_layers=4, d_model=128, n_heads=4, n_kv=2,
+               d_ff=256, vocab=512, act="swiglu", remat="none")
+params = init_params(jax.random.PRNGKey(0), cfg)
+n_params = sum(x.size for x in jax.tree.leaves(params))
+print(f"model: {n_params / 1e6:.2f}M params")
+
+# epoch shuffle-index map ships compressed (the paper's codec on the wire)
+order, packed = make_shuffle_index(100_000, epoch=0)
+print(f"shuffle index: {bitpack.bits_per_int(packed):.2f} bits/id "
+      f"(vs 32 raw)")
+
+stream = TokenStream(cfg.vocab, seed=0)
+
+
+def data_iter():
+    while True:
+        b = stream.batch(8, 64)
+        yield {k: jnp.asarray(v) for k, v in b.items()}
+
+
+opt_cfg = adamw.AdamWConfig(lr=3e-3)
+step = make_lm_train_step(cfg, opt_cfg, total_steps=args.steps, warmup=20)
+trainer = Trainer(step, params, adamw.init(params, opt_cfg), data_iter(),
+                  TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                                ckpt_dir="/tmp/repro_lm_demo",
+                                log_every=25))
+trainer.install_preemption_handler()
+res = trainer.run(start_step=trainer.try_restore())
+print("loss history:", [round(h, 3) for h in res["history"]])
+assert res["history"][-1] < res["history"][0], "loss must decrease"
+
+# demonstrate the gradient wire format on the final step's params
+flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                        for x in jax.tree.leaves(trainer.params)])[:1 << 18]
+idx, vals, _ = gc.sparsify(flat, jnp.zeros_like(flat), 2048)
+packed, vals16 = gc.encode_wire(np.asarray(idx), np.asarray(vals))
+print(f"grad wire: top-k 2048/{flat.size} coords, "
+      f"{gc.wire_bits_per_coord(packed):.1f} bits/coord, "
+      f"{gc.compress_ratio(flat.size, 2048, packed):.0f}x vs dense f32 "
+      f"all-reduce")
+print("done — checkpoints in /tmp/repro_lm_demo")

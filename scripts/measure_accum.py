@@ -1,0 +1,56 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf iteration i9 measurement: microbatch gradient accumulation (accum=2)
+vs accum=1 on internlm2-1.8b train_4k (pod).  Same global batch, same math;
+hypothesis: per-device activation temp halves.
+
+  PYTHONPATH=src python scripts/measure_accum.py
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch.cells import _lm_param_shardings, _set_lm_hints, _ns
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+from repro.train import steps as train_steps
+
+
+def measure(accum: int):
+    mesh = make_production_mesh()
+    spec = get_config("internlm2-1.8b")
+    cfg = spec.config
+    _set_lm_hints(mesh)
+    pshape, pshard = _lm_param_shardings(cfg, mesh)
+    opt_cfg = adamw.AdamWConfig()
+    oshape = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), pshape)
+    oshard = {"mu": pshard, "nu": pshard, "step": _ns(mesh)}
+    B, S = 256, 4096
+    if accum == 1:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        bshard = {k: _ns(mesh, ("data",), None) for k in batch}
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((accum, B // accum, S),
+                                                jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((accum, B // accum, S),
+                                                jnp.int32)}
+        bshard = {k: _ns(mesh, None, ("data",), None) for k in batch}
+    fn = train_steps.make_lm_train_step(cfg, opt_cfg, accum=accum)
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    with mesh:
+        c = jax.jit(fn, in_shardings=(pshard, oshard, bshard, _ns(mesh))) \
+            .lower(pshape, oshape, batch, rng).compile()
+    m = c.memory_analysis()
+    print(f"accum={accum}: temp={m.temp_size_in_bytes / 1e9:.2f} GB "
+          f"args={m.argument_size_in_bytes / 1e9:.2f} GB")
+    return m.temp_size_in_bytes
+
+
+if __name__ == "__main__":
+    t1 = measure(1)
+    t2 = measure(2)
+    print(f"temp ratio accum2/accum1 = {t2 / t1:.3f}")

@@ -1,0 +1,58 @@
+"""Architecture registry: every assigned arch is a selectable config
+(``--arch <id>``), each paired with its own input-shape set (the 40 dry-run
+cells), plus the paper's own index/serving 'architecture'."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+_REGISTRY: dict[str, "ArchSpec"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                 # 'lm' | 'gnn' | 'recsys' | 'index'
+    config: Any                 # LMConfig / GNNConfig / RecsysConfig / dict
+    shapes: dict[str, dict]     # shape name → shape params
+    source: str = ""            # citation tag from the assignment
+
+    def smoke_config(self):
+        """Reduced same-family config for CPU smoke tests."""
+        from repro.configs import reduce as reduce_lib
+        return reduce_lib.reduced(self)
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_config(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def all_arch_ids() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        gemma_7b, phi3_medium_14b, internlm2_1_8b, granite_moe_1b, kimi_k2,
+        graphsage_reddit, mind, sasrec, din, bert4rec, paper_index)
+
+
+# Canonical LM shape set (shared by all 5 LM archs)
+LM_SHAPES = {
+    "train_4k": {"kind": "train", "seq_len": 4096, "global_batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq_len": 32768, "global_batch": 32},
+    "decode_32k": {"kind": "decode", "seq_len": 32768, "global_batch": 128},
+    "long_500k": {"kind": "decode", "seq_len": 524288, "global_batch": 1},
+}

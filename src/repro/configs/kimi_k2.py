@@ -1,0 +1,21 @@
+"""kimi-k2-1t-a32b [moe] 61L d_model=7168 64H (GQA kv=8) d_ff=2048 (expert),
+vocab=163840, MoE 384e top-8 — trillion-param MoE (paper-table)
+[arXiv:2501.kimi2; unverified].
+
+Simplifications noted in DESIGN.md: uniform MoE layers (the released model has
+a dense first layer + 1 shared expert); params/moments bf16 + fsdp preset —
+at 512 chips: ~2 TB bf16 weights → ~4 GB/chip, moments 2×."""
+from repro.configs.base import ArchSpec, LM_SHAPES, register
+from repro.models.transformer import LMConfig
+
+SPEC = register(ArchSpec(
+    arch_id="kimi-k2-1t-a32b",
+    family="lm",
+    config=LMConfig(
+        name="kimi-k2-1t-a32b", n_layers=61, d_model=7168, n_heads=64,
+        n_kv=8, d_ff=2048, vocab=163840, head_dim=112, act="swiglu",
+        n_experts=384, top_k=8, param_dtype="bfloat16",
+        capacity_factor=1.25, sharding_preset="fsdp", remat="full"),
+    shapes=dict(LM_SHAPES),
+    source="arXiv:2501.kimi2; unverified",
+))

@@ -1,0 +1,16 @@
+"""The paper's own 'architecture': the compressed-posting-list conjunctive
+query engine (HYB+M2, SvS, SIMD intersection) — bonus dry-run cells beyond
+the 40 assigned (batched galloping intersection sharded over the mesh)."""
+from repro.configs.base import ArchSpec, register
+
+SPEC = register(ArchSpec(
+    arch_id="paper-index",
+    family="index",
+    config={"codec": "bp-d1", "B": 16, "n_docs": 1 << 22},
+    shapes={
+        "svs_batch": {"kind": "svs", "n_queries": 4096, "m": 4096,
+                      "n": 1 << 20},
+        "decode_bulk": {"kind": "decode_lists", "n_blocks": 8192},
+    },
+    source="Lemire, Boytsov, Kurz 2014 (this paper)",
+))

@@ -1,0 +1,61 @@
+"""Bitmap posting representation (paper §6.7, HYB+M2 substrate).
+
+Bitmaps are uint32 word arrays; a list is stored as a bitmap when its average
+gap ≤ B, i.e. len ≥ n_docs / B.  Operations map to single TPU vector ops:
+AND + ``lax.population_count`` for bitmap∧bitmap, gather + bit-test for
+list∧bitmap probes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def build_np(values: np.ndarray, n_docs: int) -> np.ndarray:
+    words = np.zeros((n_docs + 31) // 32, dtype=np.uint32)
+    v = np.asarray(values, dtype=np.int64)
+    np.bitwise_or.at(words, v >> 5, (np.uint32(1) << (v & 31).astype(np.uint32)))
+    return words
+
+
+@jax.jit
+def probe(words, vals, mask):
+    """mask &= bitmap[vals] for sentinel-padded int32 vals."""
+    w = jnp.take(words, jnp.clip(vals >> 5, 0, words.shape[0] - 1))
+    bit = (w >> (vals & 31).astype(jnp.uint32)) & 1
+    return mask & (bit == 1)
+
+
+@jax.jit
+def bitmap_and(a, b):
+    return a & b
+
+
+@jax.jit
+def popcount(words):
+    return jnp.sum(lax.population_count(words).astype(jnp.int32))
+
+
+@jax.jit
+def intersect_count(a, b):
+    return popcount(a & b)
+
+
+def extract_np(words: np.ndarray) -> np.ndarray:
+    """Host-side: bitmap -> sorted doc-id list."""
+    w = np.asarray(words)
+    bits = np.unpackbits(w.view(np.uint8), bitorder="little")
+    return np.nonzero(bits)[0].astype(np.int32)
+
+
+@jax.jit
+def to_mask_over(vals, words):
+    """Membership of padded vals in bitmap (no prior mask)."""
+    return probe(words, vals, vals >= 0)
+
+
+def bits_per_int(words: np.ndarray, n: int) -> float:
+    return words.size * 32 / max(n, 1)

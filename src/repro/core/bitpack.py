@@ -1,0 +1,235 @@
+"""Block bit packing for sorted 32-bit integers (paper §3, S4-BP128 → TPU).
+
+Layout (DESIGN.md §2.1): a block is ROWS×128 integers viewed as a (ROWS, 128)
+tile; lane ``l`` packs its ROWS integers vertically into ``b`` 32-bit words, so
+a block packs to a (b, 128) tile.  Blocks concatenate into one flat
+(total_rows, 128) uint32 word array with per-block row offsets.
+
+Unpacking is *width-generic*: for output row ``r`` the source word index
+``(r*b)//32`` and shift ``(r*b)%32`` are computed from the (traced) width, so a
+single gather-based decoder handles every bit width in one call — no per-width
+dispatch (beyond-paper; DESIGN.md §2.1).
+
+Decoding integrates the differential-coding prefix sum (paper Algorithm 1) in
+the same jitted function; ``decode_ni`` is the two-pass ("-NI") variant used by
+benchmarks to reproduce Fig. 1a.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import deltas as deltas_lib
+
+LANES = 128
+DEFAULT_ROWS = 32          # 4096-integer blocks; 8 → 1024-integer blocks
+
+
+# --------------------------------------------------------------------------
+# container
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedList:
+    """Device representation of one compressed sorted list."""
+    flat_words: jnp.ndarray    # (total_rows, 128) uint32
+    widths: jnp.ndarray        # (K,) int32   bit width per block
+    offsets: jnp.ndarray       # (K,) int32   row offset of each block
+    maxes: jnp.ndarray         # (K,) uint32  last value of each block (skip index)
+    n: int                     # valid count (static)
+    mode: str = "d1"           # delta mode (static)
+    block_rows: int = DEFAULT_ROWS
+
+    @property
+    def num_blocks(self) -> int:
+        return self.widths.shape[0]
+
+    @property
+    def padded_n(self) -> int:
+        return self.num_blocks * self.block_rows * LANES
+
+    def tree_flatten(self):
+        return (self.flat_words, self.widths, self.offsets, self.maxes), (
+            self.n, self.mode, self.block_rows)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n=aux[0], mode=aux[1], block_rows=aux[2])
+
+
+jax.tree_util.register_pytree_node(
+    PackedList, PackedList.tree_flatten, PackedList.tree_unflatten)
+
+
+# --------------------------------------------------------------------------
+# host-side pack (numpy)
+# --------------------------------------------------------------------------
+
+def pack_block_np(deltas_block: np.ndarray, width: int) -> np.ndarray:
+    """deltas_block: (R, 128) uint32 with values < 2**width -> (width, 128)."""
+    R, L = deltas_block.shape
+    if width == 0:
+        return np.zeros((0, L), dtype=np.uint32)
+    d = deltas_block.astype(np.uint64)
+    out = np.zeros((width, L), dtype=np.uint64)
+    for r in range(R):
+        start = r * width
+        w, sh = divmod(start, 32)
+        out[w] |= d[r] << np.uint64(sh)
+        if sh + width > 32:
+            out[w + 1] |= d[r] >> np.uint64(32 - sh)
+    return (out & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def encode(values: np.ndarray, mode: str = "d1",
+           block_rows: int | None = None) -> PackedList:
+    """Compress a sorted 1-D array of non-negative ints (< 2**32) on the host.
+
+    block_rows=None picks the block size adaptively: short lists use
+    1024-int blocks (8 rows) so tail padding does not dominate — measured
+    37→~11 bits/int on ~1k-item posting lists (EXPERIMENTS §Perf, codec
+    iteration c2); long lists use the TPU-native 4096-int blocks."""
+    v = np.asarray(values, dtype=np.int64).ravel()
+    n = int(v.size)
+    if block_rows is None:
+        block_rows = 8 if n <= 8192 else DEFAULT_ROWS
+    if n == 0:
+        v = np.zeros(1, dtype=np.int64)
+    per = block_rows * LANES
+    npad = (-len(v)) % per
+    if npad:
+        v = np.concatenate([v, np.full(npad, v[-1], dtype=np.int64)])
+    K = len(v) // per
+    blocks = v.reshape(K, block_rows, LANES)
+    maxes = blocks[:, -1, -1].copy()
+    seeds = np.concatenate([[0], maxes[:-1]])
+    d = deltas_lib.encode_deltas_np(blocks, seeds, mode)
+    widths = np.array(
+        [int(d[k].max()).bit_length() for k in range(K)], dtype=np.int32)
+    packed = [pack_block_np(d[k], int(widths[k])) for k in range(K)]
+    offsets = np.concatenate([[0], np.cumsum(widths[:-1])]).astype(np.int32)
+    total_rows = int(widths.sum())
+    flat = (np.concatenate(packed, axis=0) if total_rows
+            else np.zeros((0, LANES), dtype=np.uint32))
+    if flat.shape[0] == 0:                      # keep gathers in-bounds
+        flat = np.zeros((1, LANES), dtype=np.uint32)
+    return PackedList(
+        flat_words=jnp.asarray(flat),
+        widths=jnp.asarray(widths),
+        offsets=jnp.asarray(offsets),
+        maxes=jnp.asarray(maxes.astype(np.uint32)),
+        n=n, mode=mode, block_rows=block_rows)
+
+
+# --------------------------------------------------------------------------
+# device-side unpack + integrated prefix sum (jnp)
+# --------------------------------------------------------------------------
+
+def unpack_deltas(flat_words, widths, offsets, block_rows: int = DEFAULT_ROWS):
+    """Width-generic gather-based bit unpack.
+
+    flat_words: (T, 128) uint32; widths/offsets: (K,) int32.
+    Returns (K, block_rows, 128) uint32 deltas.
+    """
+    T = flat_words.shape[0]
+    K = widths.shape[0]
+    r = jnp.arange(block_rows, dtype=jnp.int32)            # (R,)
+    b = widths[:, None]                                    # (K, 1)
+    start = r[None, :] * b                                 # (K, R) bit offset
+    w = start >> 5
+    sh = (start & 31).astype(jnp.uint32)
+    idx_lo = jnp.clip(offsets[:, None] + w, 0, T - 1)
+    idx_hi = jnp.clip(offsets[:, None] + w + 1, 0, T - 1)
+    lo = jnp.take(flat_words, idx_lo, axis=0)              # (K, R, 128)
+    hi = jnp.take(flat_words, idx_hi, axis=0)
+    bu = b.astype(jnp.uint32)
+    mask = jnp.where(b >= 32, jnp.uint32(0xFFFFFFFF),
+                     (jnp.uint32(1) << jnp.minimum(bu, 31)) - 1)[..., None]
+    spill = (sh + bu) > 32                                 # (K, R)
+    val = lo >> sh[..., None]
+    hi_part = hi << (((jnp.uint32(32) - sh) & 31)[..., None])
+    val = jnp.where(spill[..., None], val | hi_part, val)
+    return val & mask
+
+
+@partial(jax.jit, static_argnames=("mode", "block_rows"))
+def decode_integrated(flat_words, widths, offsets, seeds, mode: str,
+                      block_rows: int = DEFAULT_ROWS):
+    """One-pass unpack + prefix sum (paper's integrated Algorithm 1)."""
+    d = unpack_deltas(flat_words, widths, offsets, block_rows)
+    return deltas_lib.prefix_sum(d, seeds, mode)
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def _unpack_only(flat_words, widths, offsets, block_rows: int = DEFAULT_ROWS):
+    return unpack_deltas(flat_words, widths, offsets, block_rows)
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def _prefix_only(d, seeds, mode: str):
+    return deltas_lib.prefix_sum(d, seeds, mode)
+
+
+def seeds_of(pl: PackedList) -> jnp.ndarray:
+    return jnp.concatenate(
+        [jnp.zeros((1,), jnp.uint32), pl.maxes[:-1]])
+
+
+def decode(pl: PackedList) -> jnp.ndarray:
+    """Decode a PackedList to its (padded) flat value array (padded_n,)."""
+    vals = decode_integrated(pl.flat_words, pl.widths, pl.offsets, seeds_of(pl),
+                             pl.mode, pl.block_rows)
+    return vals.reshape(-1)
+
+
+def decode_ni(pl: PackedList) -> jnp.ndarray:
+    """Two-pass (-NI) decode: deltas materialized, prefix sum separate."""
+    d = _unpack_only(pl.flat_words, pl.widths, pl.offsets, pl.block_rows)
+    jax.block_until_ready(d)
+    return _prefix_only(d, seeds_of(pl), pl.mode).reshape(-1)
+
+
+def decode_np(pl: PackedList) -> np.ndarray:
+    """Decode and trim to the valid length (host round-trip convenience)."""
+    return np.asarray(decode(pl))[: pl.n]
+
+
+def _pow2(n: int, floor: int = 1) -> int:
+    size = floor
+    while size < n:
+        size *= 2
+    return size
+
+
+def decode_bucketed(pl: PackedList) -> jnp.ndarray:
+    """Decode with (K, T) padded to powers of two: bounds the number of jit
+    specializations in serving to O(log^2) — shape bucketing, the standard
+    JAX serving pattern.  Padding blocks have width 0 and decode to the seed
+    value; callers trim to pl.n as usual."""
+    K = pl.num_blocks
+    T = pl.flat_words.shape[0]
+    Kp, Tp = _pow2(K), _pow2(T)
+    widths = jnp.pad(pl.widths, (0, Kp - K))
+    offsets = jnp.pad(pl.offsets, (0, Kp - K), constant_values=T - 1)
+    maxes = jnp.pad(pl.maxes, (0, Kp - K), mode="edge" if K else "constant")
+    flat = jnp.pad(pl.flat_words, ((0, Tp - T), (0, 0)))
+    seeds = jnp.concatenate([jnp.zeros((1,), jnp.uint32), maxes[:-1]])
+    vals = decode_integrated(flat, widths, offsets, seeds, pl.mode,
+                             pl.block_rows)
+    return vals.reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# accounting
+# --------------------------------------------------------------------------
+
+def bits_per_int(pl: PackedList) -> float:
+    """Storage cost: packed words + per-block metadata (1B width + 4B max)."""
+    data_bits = int(np.asarray(pl.widths).sum()) * LANES * 32
+    meta_bits = pl.num_blocks * (8 + 32)
+    return (data_bits + meta_bits) / max(pl.n, 1)

@@ -1,0 +1,90 @@
+"""Codec registry (paper §3's scheme zoo, by name).
+
+Names mirror the paper: ``bp-<mode>`` is the S4-BP128 family at TPU block
+geometry, ``bp-<mode>-ni`` the two-pass (non-integrated) variant,
+``fastpfor-<mode>`` the patched family, ``varint`` the scalar baseline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bitpack, fastpfor, varint
+from repro.core.deltas import MODES
+
+
+class _BPCodec:
+    def __init__(self, mode: str, integrated: bool = True,
+                 block_rows: int | None = None):
+        self.mode, self.integrated, self.block_rows = mode, integrated, block_rows
+
+    def encode(self, values):
+        return bitpack.encode(values, mode=self.mode, block_rows=self.block_rows)
+
+    def decode(self, pl):
+        return bitpack.decode(pl) if self.integrated else bitpack.decode_ni(pl)
+
+    def decode_np(self, pl):
+        return np.asarray(self.decode(pl))[: pl.n]
+
+    def bits_per_int(self, pl):
+        return bitpack.bits_per_int(pl)
+
+
+class _PForCodec:
+    def __init__(self, mode: str, block_rows: int = 32):
+        self.mode, self.block_rows = mode, block_rows
+
+    def encode(self, values):
+        return fastpfor.encode(values, mode=self.mode, block_rows=self.block_rows)
+
+    def decode(self, pl):
+        return fastpfor.decode(pl)
+
+    def decode_np(self, pl):
+        return fastpfor.decode_np(pl)
+
+    def bits_per_int(self, pl):
+        return fastpfor.bits_per_int(pl)
+
+
+class _VarintCodec:
+    mode = "d1"
+
+    def encode(self, values):
+        return varint.encode(values)
+
+    def decode(self, vl):
+        return varint.decode(vl)
+
+    def decode_np(self, vl):
+        return varint.decode(vl)
+
+    def bits_per_int(self, vl):
+        return varint.bits_per_int(vl)
+
+
+def get_codec(name: str):
+    name = name.lower()
+    if name == "varint":
+        return _VarintCodec()
+    parts = name.split("-")
+    fam = parts[0]
+    mode = parts[1] if len(parts) > 1 else "d1"
+    if mode not in MODES:
+        raise ValueError(f"unknown delta mode {mode!r} in codec {name!r}")
+    if fam == "bp":
+        return _BPCodec(mode, integrated="ni" not in parts)
+    if fam == "bp8":    # 1024-integer blocks (finer width granularity)
+        return _BPCodec(mode, integrated="ni" not in parts, block_rows=8)
+    if fam == "fastpfor":
+        return _PForCodec(mode)
+    raise ValueError(f"unknown codec {name!r}")
+
+
+ALL_CODECS = (
+    ["varint"]
+    + [f"bp-{m}" for m in ("d1", "d2", "d4", "dm", "dv")]
+    + [f"bp-{m}-ni" for m in ("d1", "d2", "d4", "dm", "dv")]
+    + [f"fastpfor-{m}" for m in ("d1", "d2", "d4", "dm", "dv")]
+)

@@ -1,0 +1,174 @@
+"""FastPFOR / S4-FastPFOR patched coding (paper §3), TPU-adapted.
+
+Per block of ROWS×128 deltas we pick a base width b' ≤ b minimizing
+
+    cost(b') = N·b' + c(b')·(b − b' + POS_BITS)            (paper's heuristic,
+                                                            N = block size)
+
+where c(b') is the number of exceptions (deltas ≥ 2**b').  The least
+significant b' bits of every delta are bit-packed exactly like BP blocks; each
+exception additionally stores its position and its high b−b' bits.  As in
+S4-FastPFOR, high-bit arrays are accounted bit-packed per (b−b') class, padded
+to multiples of 32 integers.
+
+Device decode = unpack base → patch (scatter-add of high<<b' at exception
+positions) → prefix sum.  Patching must precede the prefix sum, which is why —
+exactly as the paper observes — it cannot be fused with it.
+
+Storage accounting follows the paper's *format*; the device representation
+keeps exceptions as flat (position, shifted-high-bits) arrays, which is the
+TPU-operational layout (a scatter, instead of the paper's byte loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from repro.core import bitpack, deltas as deltas_lib
+
+LANES = 128
+POS_BITS = 16      # exception positions within a 4096 block (paper: 8 for 128)
+
+
+@dataclasses.dataclass
+class PatchedList:
+    flat_words: jnp.ndarray    # (T, 128) uint32 — base packed at b'
+    widths: jnp.ndarray        # (K,) int32 — b' per block
+    offsets: jnp.ndarray       # (K,) int32
+    maxes: jnp.ndarray         # (K,) uint32
+    exc_pos: jnp.ndarray       # (E,) int32 — global padded positions
+    exc_add: jnp.ndarray       # (E,) uint32 — high bits already shifted by b'
+    n: int
+    mode: str = "d1"
+    block_rows: int = bitpack.DEFAULT_ROWS
+    format_bits: int = 0       # honest storage accounting (paper format)
+
+    @property
+    def num_blocks(self):
+        return self.widths.shape[0]
+
+    def tree_flatten(self):
+        return ((self.flat_words, self.widths, self.offsets, self.maxes,
+                 self.exc_pos, self.exc_add),
+                (self.n, self.mode, self.block_rows, self.format_bits))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n=aux[0], mode=aux[1], block_rows=aux[2],
+                   format_bits=aux[3])
+
+
+jax.tree_util.register_pytree_node(
+    PatchedList, PatchedList.tree_flatten, PatchedList.tree_unflatten)
+
+
+def _best_base_width(d_flat: np.ndarray) -> tuple[int, int]:
+    """Pick b' minimizing the paper's cost heuristic. Returns (b', b)."""
+    N = d_flat.size
+    bl = np.zeros(N, dtype=np.int32)
+    nz = d_flat > 0
+    bl[nz] = np.floor(np.log2(d_flat[nz].astype(np.float64))).astype(np.int32) + 1
+    b = int(bl.max()) if N else 0
+    counts = np.bincount(bl, minlength=b + 1)
+    ge = np.cumsum(counts[::-1])[::-1]          # ge[w] = #deltas with bl > w-1
+    best_bp, best_cost = b, N * b
+    for bp in range(b + 1):
+        c = int(ge[bp + 1]) if bp + 1 <= b else 0   # exceptions: bl > bp
+        cost = N * bp + c * (b - bp + POS_BITS)
+        if cost < best_cost:
+            best_cost, best_bp = cost, bp
+    return best_bp, b
+
+
+def encode(values: np.ndarray, mode: str = "d1",
+           block_rows: int = bitpack.DEFAULT_ROWS) -> PatchedList:
+    v = np.asarray(values, dtype=np.int64).ravel()
+    n = int(v.size)
+    if n == 0:
+        v = np.zeros(1, dtype=np.int64)
+    per = block_rows * LANES
+    npad = (-len(v)) % per
+    if npad:
+        v = np.concatenate([v, np.full(npad, v[-1], dtype=np.int64)])
+    K = len(v) // per
+    blocks = v.reshape(K, block_rows, LANES)
+    maxes = blocks[:, -1, -1].copy()
+    seeds = np.concatenate([[0], maxes[:-1]])
+    d = deltas_lib.encode_deltas_np(blocks, seeds, mode)
+
+    widths = np.zeros(K, dtype=np.int32)
+    packed, all_pos, all_add = [], [], []
+    format_bits = 0
+    exc_class_counts = np.zeros(33, dtype=np.int64)   # per (b-b') class
+    for k in range(K):
+        dk = d[k].reshape(-1).astype(np.uint64)
+        bp, b = _best_base_width(dk)
+        widths[k] = bp
+        mask = np.uint64((1 << bp) - 1) if bp else np.uint64(0)
+        base = (dk & mask).astype(np.uint32)
+        packed.append(bitpack.pack_block_np(
+            base.reshape(block_rows, LANES), bp))
+        exc = np.nonzero(dk > mask)[0]
+        if exc.size:
+            high = (dk[exc] >> np.uint64(bp)).astype(np.uint32)
+            all_pos.append(exc.astype(np.int64) + k * per)
+            all_add.append((high.astype(np.uint64) << np.uint64(bp))
+                           .astype(np.uint32))
+            exc_class_counts[b - bp] += exc.size
+        # paper format: 2 width bytes + 1 exception-count byte per block
+        format_bits += per * bp + 24 + exc.size * POS_BITS
+        format_bits += 8 + 32          # our per-block metadata: width byte + max
+    # high-bit arrays: bit-packed per class, padded to multiples of 32 ints
+    for cls in range(1, 33):
+        cnt = exc_class_counts[cls]
+        if cnt:
+            padded = int(np.ceil(cnt / 32) * 32)
+            format_bits += padded * cls
+
+    offsets = np.concatenate([[0], np.cumsum(widths[:-1])]).astype(np.int32)
+    total_rows = int(widths.sum())
+    flat = (np.concatenate(packed, axis=0) if total_rows
+            else np.zeros((0, LANES), dtype=np.uint32))
+    if flat.shape[0] == 0:
+        flat = np.zeros((1, LANES), dtype=np.uint32)
+    exc_pos = (np.concatenate(all_pos) if all_pos
+               else np.zeros(0, np.int64)).astype(np.int32)
+    exc_add = (np.concatenate(all_add) if all_add
+               else np.zeros(0, np.uint32))
+    return PatchedList(
+        flat_words=jnp.asarray(flat), widths=jnp.asarray(widths),
+        offsets=jnp.asarray(offsets), maxes=jnp.asarray(maxes.astype(np.uint32)),
+        exc_pos=jnp.asarray(exc_pos), exc_add=jnp.asarray(exc_add),
+        n=n, mode=mode, block_rows=block_rows, format_bits=int(format_bits))
+
+
+@partial(jax.jit, static_argnames=("mode", "block_rows"))
+def decode_device(flat_words, widths, offsets, seeds, exc_pos, exc_add,
+                  mode: str, block_rows: int):
+    """unpack → patch → prefix sum (three stages, paper §4 last paragraph)."""
+    d = bitpack.unpack_deltas(flat_words, widths, offsets, block_rows)
+    K = widths.shape[0]
+    dflat = d.reshape(-1)
+    dflat = dflat.at[exc_pos].add(exc_add, mode="drop")
+    d = dflat.reshape(K, block_rows, LANES)
+    return deltas_lib.prefix_sum(d, seeds, mode)
+
+
+def decode(pl: PatchedList) -> jnp.ndarray:
+    seeds = jnp.concatenate([jnp.zeros((1,), jnp.uint32), pl.maxes[:-1]])
+    return decode_device(pl.flat_words, pl.widths, pl.offsets, seeds,
+                         pl.exc_pos, pl.exc_add, pl.mode,
+                         pl.block_rows).reshape(-1)
+
+
+def decode_np(pl: PatchedList) -> np.ndarray:
+    return np.asarray(decode(pl))[: pl.n]
+
+
+def bits_per_int(pl: PatchedList) -> float:
+    return pl.format_bits / max(pl.n, 1)

@@ -1,0 +1,177 @@
+"""Sorted-list intersection (paper §5), TPU-adapted.
+
+Paper algorithms → TPU-native equivalents (DESIGN.md §2.4):
+
+  SCALAR            → ``intersect_ref`` numpy two-pointer oracle
+  V1 / V3           → ``intersect_tiled``: two-pointer merge at *tile*
+                      granularity; a (TR, TF) broadcast-equality tile replaces
+                      ``pcmpeqd``+``ptest``; V3's branching layers become the
+                      tile-size hierarchy
+  SIMD GALLOPING    → ``intersect_gallop``: all m binary searches run
+                      lane-parallel (vectorized searchsorted + gather-check);
+                      O(m log n) work, O(log n) depth
+  (+ block skip)    → ``intersect_packed``: galloping over a *compressed* long
+                      list using the stored per-block maxima as a skip index —
+                      only candidate blocks are decoded
+  heuristic         → ``intersect_auto``: ratio dispatch like the paper's
+                      50×/1000× rule, thresholds re-derived on TPU geometry
+
+All device functions take sentinel-padded int32 arrays with an explicit valid
+count and return a match mask over ``r`` (the paper's output-to-input property
+becomes: results live in a buffer of len(r), compacted with ``compact``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bitpack, deltas as deltas_lib
+
+SENTINEL = np.int32(2**31 - 1)
+
+# ratio thresholds for the dispatcher (paper: V1 <50:1, V3 <1000:1, then
+# galloping).  Re-derived for TPU tiles in benchmarks/bench_intersect.py;
+# see EXPERIMENTS.md §Perf.
+TILED_MAX_RATIO = 32.0
+
+
+# --------------------------------------------------------------------------
+# oracle
+# --------------------------------------------------------------------------
+
+def intersect_ref(r: np.ndarray, f: np.ndarray) -> np.ndarray:
+    """Textbook SCALAR merge intersection (numpy oracle)."""
+    r = np.asarray(r); f = np.asarray(f)
+    out = []
+    i = j = 0
+    while i < len(r) and j < len(f):
+        if r[i] < f[j]:
+            i += 1
+        elif f[j] < r[i]:
+            j += 1
+        else:
+            out.append(r[i]); i += 1; j += 1
+    return np.array(out, dtype=r.dtype)
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def pad_to(values: np.ndarray, size: int) -> np.ndarray:
+    v = np.asarray(values, dtype=np.int32)
+    out = np.full(size, SENTINEL, dtype=np.int32)
+    out[: len(v)] = v
+    return out
+
+
+def pow2_bucket(n: int, floor: int = 128) -> int:
+    size = floor
+    while size < n:
+        size *= 2
+    return size
+
+
+@jax.jit
+def compact(vals, mask):
+    """Scatter-compact matched values; returns (sorted padded vals, count)."""
+    m = vals.shape[0]
+    idx = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    pos = jnp.where(mask, idx, m)                     # out-of-bounds → dropped
+    out = jnp.full((m,), SENTINEL, dtype=vals.dtype)
+    out = out.at[pos].set(vals, mode="drop")
+    return out, jnp.sum(mask.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# vectorized galloping (searchsorted)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def intersect_gallop(r, f):
+    """All-lanes-parallel binary search of r into f. Returns mask over r."""
+    n = f.shape[0]
+    pos = jnp.searchsorted(f, r, side="left")
+    hit = jnp.take(f, jnp.clip(pos, 0, n - 1)) == r
+    return hit & (r != SENTINEL)
+
+
+# --------------------------------------------------------------------------
+# tiled merge (V1/V3 analogue)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("tile_r", "tile_f"))
+def intersect_tiled(r, f, tile_r: int = 128, tile_f: int = 1024):
+    """Tile-granular two-pointer merge. Returns mask over r.
+
+    Each step compares a (tile_r,) window of r against a (tile_f,) window of f
+    with one broadcast equality tile, then advances the window(s) whose max is
+    not larger (both on ties) — the V1 walk at vreg granularity.
+    """
+    m, n = r.shape[0], f.shape[0]
+    assert m % tile_r == 0 and n % tile_f == 0, "pad inputs to tile multiples"
+    nri, nfi = m // tile_r, n // tile_f
+
+    def cond(state):
+        i, j, _ = state
+        return (i < nri) & (j < nfi)
+
+    def body(state):
+        i, j, mask = state
+        rt = lax.dynamic_slice(r, (i * tile_r,), (tile_r,))
+        ft = lax.dynamic_slice(f, (j * tile_f,), (tile_f,))
+        eq = rt[:, None] == ft[None, :]
+        hit = jnp.any(eq, axis=1) & (rt != SENTINEL)
+        row = lax.dynamic_slice(mask, (i * tile_r,), (tile_r,))
+        mask = lax.dynamic_update_slice(mask, row | hit, (i * tile_r,))
+        r_max, f_max = rt[-1], ft[-1]
+        return (jnp.where(r_max <= f_max, i + 1, i),
+                jnp.where(f_max <= r_max, j + 1, j), mask)
+
+    mask0 = jnp.zeros((m,), dtype=bool)
+    _, _, mask = lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(0), mask0))
+    return mask
+
+
+# --------------------------------------------------------------------------
+# galloping over a compressed list (block-skip; Skipper idea, paper §2)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("mode", "block_rows"))
+def _packed_gallop(r, flat_words, widths, offsets, maxes, mode: str,
+                   block_rows: int):
+    K = widths.shape[0]
+    blk = jnp.clip(jnp.searchsorted(maxes.astype(jnp.int32), r, side="left"),
+                   0, K - 1)
+    seeds = jnp.where(blk > 0, maxes[jnp.maximum(blk - 1, 0)], jnp.uint32(0))
+    d = bitpack.unpack_deltas(flat_words, widths[blk], offsets[blk], block_rows)
+    vals = deltas_lib.prefix_sum(d, seeds, mode)       # (m, R, 128)
+    hit = jnp.any(vals.astype(jnp.int32) == r[:, None, None], axis=(1, 2))
+    return hit & (r != SENTINEL)
+
+
+def intersect_packed(r, packed_f: bitpack.PackedList):
+    """Intersect padded r against a *compressed* long list: binary-search the
+    block-max skip index, decode only the candidate block per element."""
+    return _packed_gallop(r, packed_f.flat_words, packed_f.widths,
+                          packed_f.offsets, packed_f.maxes, packed_f.mode,
+                          packed_f.block_rows)
+
+
+# --------------------------------------------------------------------------
+# dispatcher (paper's heuristic, §5)
+# --------------------------------------------------------------------------
+
+def intersect_auto(r, f, r_count: int, f_count: int):
+    """Host-side ratio dispatch (lengths are metadata, as in the paper)."""
+    ratio = max(f_count, 1) / max(r_count, 1)
+    if ratio <= TILED_MAX_RATIO:
+        tile_r = min(128, r.shape[0])
+        tile_f = min(1024, f.shape[0])
+        return intersect_tiled(r, f, tile_r=tile_r, tile_f=tile_f)
+    return intersect_gallop(r, f)

@@ -1,0 +1,152 @@
+"""Sharding rules: parameter PartitionSpecs per model family + activation
+constraint hints.
+
+Conventions (DESIGN.md §4): mesh axes ('pod', 'data', 'model') multi-pod or
+('data', 'model') single-pod.  Batch shards over BATCH_AXES = ('pod','data')
+(whichever exist); tensor parallelism over 'model'; the `fsdp` preset
+additionally shards large weight dims over 'data' (ZeRO-3-like, needed for
+kimi-k2's ~1T params).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# mesh-aware hint plumbing
+# ---------------------------------------------------------------------------
+
+_HINT_RULES: dict[str, P] = {}
+_HINT_MESH: list = [None]
+
+
+def set_hint_rules(rules: dict[str, P], mesh: "Mesh | None" = None) -> None:
+    """Register activation-sharding hints + the mesh they bind to.  With no
+    mesh (tests, single-device runs) hints are identity."""
+    _HINT_RULES.clear()
+    _HINT_RULES.update(rules)
+    _HINT_MESH[0] = mesh
+
+
+def shard_hint(x, name: str):
+    """with_sharding_constraint if a rule is registered and a mesh was bound;
+    otherwise identity (keeps model code mesh-agnostic)."""
+    spec = _HINT_RULES.get(name)
+    mesh = _HINT_MESH[0]
+    if spec is None or mesh is None:
+        return x
+    if x.ndim < len(spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh():
+    """Mesh bound by set_hint_rules (None outside launcher contexts)."""
+    return _HINT_MESH[0]
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _divisible(dim: int, mesh: Mesh, axis) -> bool:
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return dim % size == 0 and dim >= size
+
+
+def lm_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                  preset: str = "tp") -> P:
+    """Name-based Megatron-style rules for stacked-layer LM params.
+
+    path: '/'-joined pytree key path, e.g. 'layers/attn/wq'.
+    """
+    dp = batch_axes(mesh)
+    specs: list[Any] = [None] * len(shape)
+
+    def put(idx: int, axis) -> bool:
+        if specs[idx] is None and _divisible(shape[idx], mesh, axis):
+            specs[idx] = axis
+            return True
+        return False
+
+    name = path.split("/")[-1]
+    if name in ("embed", "lm_head"):
+        # (V, D): vocab over model (col-parallel logits)
+        put(0, "model")
+        if preset == "fsdp":
+            put(1, dp if len(dp) == 1 else "data")
+    elif name in ("wq", "wk", "wv", "w_in", "w_gate"):
+        put(len(shape) - 1, "model")       # output-feature parallel
+        if preset == "fsdp":
+            put(len(shape) - 2, "data")
+    elif name in ("wo", "w_out"):
+        put(len(shape) - 2, "model")       # input-feature parallel
+        if preset == "fsdp":
+            put(len(shape) - 1, "data")
+    elif name == "router":
+        pass                                # small, replicated
+    # norms / scalars: replicated
+    # MoE stacked experts (L, E, D, F): expert dim gets 'model' instead
+    if "moe" in path and len(shape) == 4:
+        specs = [None] * len(shape)
+        put(1, "model")                     # experts → EP
+        if preset == "fsdp":
+            put(2, "data")
+    return P(*specs)
+
+
+def recsys_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    name = path.split("/")[-1]
+    if "table" in name or name == "embed":
+        # (V, d): column-shard d over 'model' if divisible, else rows
+        if _divisible(shape[-1], mesh, "model"):
+            return P(None, "model")
+        if _divisible(shape[0], mesh, "model"):
+            return P("model", None)
+    return P(*([None] * len(shape)))
+
+
+def gnn_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    if len(shape) == 2 and _divisible(shape[-1], mesh, "model"):
+        return P(None, "model")
+    return P(*([None] * len(shape)))
+
+
+def tree_param_shardings(params, mesh: Mesh, rule) -> Any:
+    """Map a rule(path, shape, mesh) → NamedSharding over a params pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for keypath, leaf in flat:
+        path = "/".join(_key_name(k) for k in keypath)
+        spec = rule(path, leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def data_sharding(mesh: Mesh, *spec_tail) -> NamedSharding:
+    """Batch-dim sharding over ('pod','data')."""
+    dp = batch_axes(mesh)
+    return NamedSharding(mesh, P(dp, *spec_tail))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,91 @@
+"""HYB+M2 inverted index builder (paper §6.7, after Culpepper & Moffat [6]).
+
+Lists with average gap ≤ B (i.e. len ≥ n_docs/B) become bitmaps; the rest are
+compressed with the configured codec.  The corpus is split into ``n_parts``
+doc-id ranges — the paper's L3-cache partitioning, which at cluster scale maps
+1:1 onto data-parallel shards (DESIGN.md §2.5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import codecs as codec_lib
+
+
+@dataclasses.dataclass
+class TermPosting:
+    kind: str                  # 'list' | 'bitmap' | 'empty'
+    payload: Any               # PackedList/PatchedList/VarintList | words
+    n: int                     # postings in this part
+    raw: np.ndarray | None = None   # kept for oracle checks in tests
+
+
+@dataclasses.dataclass
+class IndexPart:
+    doc_lo: int
+    doc_hi: int
+    terms: dict[int, TermPosting]
+
+
+@dataclasses.dataclass
+class HybridIndex:
+    n_docs: int
+    B: int                      # bitmap threshold (0 = no bitmaps)
+    codec_name: str
+    parts: list[IndexPart]
+
+    def stats(self) -> dict:
+        from repro.core import varint as varint_lib
+        bits = 0
+        n = 0
+        codec = codec_lib.get_codec(self.codec_name)
+        for part in self.parts:
+            for tp in part.terms.values():
+                n += tp.n
+                if tp.kind == "bitmap":
+                    bits += int(tp.payload.size) * 32
+                elif tp.kind == "list":
+                    if isinstance(tp.payload, varint_lib.VarintList):
+                        bits += varint_lib.bits_per_int(tp.payload) * tp.n
+                    else:
+                        bits += codec.bits_per_int(tp.payload) * tp.n
+        return {"bits_per_int": bits / max(n, 1), "postings": n}
+
+
+def build(postings: list[np.ndarray], n_docs: int, codec_name: str = "bp-d1",
+          B: int = 0, n_parts: int = 1, keep_raw: bool = False,
+          varint_tail_below: int = 1024) -> HybridIndex:
+    """varint_tail_below: lists shorter than this are stored Varint — the
+    paper's tail-codec rule (block packing pays block/n × padding overhead on
+    tiny lists; EXPERIMENTS §Perf c4)."""
+    codec = codec_lib.get_codec(codec_name)
+    tail_codec = codec_lib.get_codec("varint")
+    bounds = np.linspace(0, n_docs, n_parts + 1).astype(np.int64)
+    parts = []
+    for p in range(n_parts):
+        lo, hi = int(bounds[p]), int(bounds[p + 1])
+        span = max(hi - lo, 1)
+        terms: dict[int, TermPosting] = {}
+        for tid, docs in enumerate(postings):
+            seg = docs[(docs >= lo) & (docs < hi)] - lo
+            if seg.size == 0:
+                terms[tid] = TermPosting("empty", None, 0)
+                continue
+            avg_gap = span / seg.size
+            if B > 0 and avg_gap <= B:
+                terms[tid] = TermPosting(
+                    "bitmap", bm.build_np(seg, span), int(seg.size),
+                    raw=seg if keep_raw else None)
+            else:
+                c = tail_codec if (codec_name != "varint"
+                                   and seg.size < varint_tail_below) else codec
+                terms[tid] = TermPosting(
+                    "list", c.encode(seg), int(seg.size),
+                    raw=seg if keep_raw else None)
+        parts.append(IndexPart(lo, hi, terms))
+    return HybridIndex(n_docs=n_docs, B=B, codec_name=codec_name, parts=parts)

@@ -1,0 +1,69 @@
+"""Synthetic corpus + query log matched to the paper's Table 2 marginals.
+
+No TREC data is available offline, so we generate: (a) per-term posting lists
+whose documents follow the ClusterData process (sorted-run structure like the
+URL-sorted GOV2), and (b) a query log whose term-count distribution and
+per-position posting-list lengths are fitted to the paper's Table 2 statistics
+(scaled to the synthetic corpus size).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.clusterdata import clusterdata
+
+# Table 2(a), ClueWeb09: {terms: (query %, [avg hits per term, thousands])}
+TABLE2_CLUEWEB = {
+    2: (19.8, [380, 2600]),
+    3: (32.5, [400, 1500, 5100]),
+    4: (26.3, [480, 1400, 3200, 8100]),
+    5: (13.2, [420, 1200, 2600, 4800, 10000]),
+    6: (4.9, [350, 1000, 2100, 3700, 6500, 13000]),
+    7: (1.7, [390, 1100, 2100, 3400, 5200, 7300, 13000]),
+}
+TABLE2_DOCS = 50_000_000    # ClueWeb09 corpus size the marginals refer to
+
+
+@dataclasses.dataclass
+class Corpus:
+    n_docs: int
+    postings: list[np.ndarray]        # term id → sorted doc ids
+    queries: list[list[int]]          # query → term ids (sorted by length)
+
+    @property
+    def n_terms(self) -> int:
+        return len(self.postings)
+
+
+def synthesize(n_docs: int = 1 << 20, n_queries: int = 200,
+               seed: int = 0, table=TABLE2_CLUEWEB) -> Corpus:
+    """Build posting lists + queries scaled from the paper's Table 2."""
+    rng = np.random.default_rng(seed)
+    scale = n_docs / TABLE2_DOCS
+    universe_bits = int(np.ceil(np.log2(n_docs)))
+
+    # desired per-position lengths (thousands → docs, scaled)
+    counts = np.array([c for _, (_, lens) in table.items() for c in lens])
+    term_sizes: list[int] = []
+    queries: list[list[int]] = []
+    probs = np.array([p for _, (p, _) in table.items()])
+    probs = probs / probs.sum()
+    n_terms_options = list(table.keys())
+    for _ in range(n_queries):
+        k = int(rng.choice(n_terms_options, p=probs))
+        lens = table[k][1]
+        tids = []
+        for ln in lens:
+            target = max(int(ln * 1000 * scale *
+                             float(np.exp(rng.normal(0, 0.35)))), 4)
+            target = min(target, n_docs - 1)
+            tids.append(len(term_sizes))
+            term_sizes.append(target)
+        queries.append(tids)
+
+    postings = [clusterdata(rng, sz, universe_bits) for sz in term_sizes]
+    postings = [p[p < n_docs] for p in postings]
+    return Corpus(n_docs=n_docs, postings=postings, queries=queries)

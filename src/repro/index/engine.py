@@ -1,0 +1,162 @@
+"""Conjunctive query engine: SvS over compressed lists + bitmap probes
+(paper §5–§6.7).
+
+Pipeline per query, per index part — exactly the paper's:
+  1. order terms by posting length (SvS),
+  2. decode the two shortest compressed lists, intersect with the
+     ratio-dispatched SIMD algorithm (V1-tile / galloping / packed-gallop),
+  3. fold in remaining compressed lists (against the shrinking candidate set),
+  4. probe candidate doc ids against each bitmap term,
+  5. (all-bitmap queries) AND the bitmaps directly.
+
+JAX serving constraint: shapes are static, so decoded/padded lengths are
+bucketed to powers of two (recompile count is O(log n_docs) per algorithm) —
+the standard shape-bucketing pattern of real JAX serving systems.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import bitpack
+from repro.core import codecs as codec_lib
+from repro.core import intersect as its
+from repro.index.builder import HybridIndex, IndexPart
+
+USE_KERNELS = False     # flipped by callers who want the Pallas path
+
+
+class DecodeCache:
+    """LRU cache of decoded (padded) posting lists — the paper's Table 4
+    regime: SvS over *uncompressed* lists.  Real engines decode hot lists
+    once, not per query; capacity bounds working-set memory like the paper's
+    L3-sized partitions bound theirs."""
+
+    def __init__(self, capacity_ints: int = 1 << 24):
+        self.capacity = capacity_ints
+        self._store: dict[int, tuple] = {}
+        self._size = 0
+        self._tick = 0
+
+    def get(self, key):
+        hit = self._store.get(key)
+        if hit is None:
+            return None
+        self._tick += 1
+        self._store[key] = (hit[0], hit[1], self._tick)
+        return hit[0], hit[1]
+
+    def put(self, key, vals, n):
+        self._size += int(vals.shape[0])
+        self._tick += 1
+        self._store[key] = (vals, n, self._tick)
+        while self._size > self.capacity and len(self._store) > 1:
+            oldest = min(self._store, key=lambda k: self._store[k][2])
+            self._size -= int(self._store[oldest][0].shape[0])
+            del self._store[oldest]
+
+
+@dataclasses.dataclass
+class QueryResult:
+    count: int
+    docs: np.ndarray        # global doc ids (may be truncated to cap)
+
+
+def _decode_padded(codec, tp) -> tuple[jnp.ndarray, int]:
+    from repro.core import varint as varint_lib
+    if isinstance(tp.payload, bitpack.PackedList):
+        vals = np.asarray(bitpack.decode_bucketed(tp.payload))[: tp.n]
+        vals = vals.astype(np.int32)
+    elif isinstance(tp.payload, varint_lib.VarintList):
+        vals = varint_lib.decode(tp.payload).astype(np.int32)   # tail codec
+    else:
+        vals = np.asarray(codec.decode(tp.payload))[: tp.n].astype(np.int32)
+    size = its.pow2_bucket(tp.n)
+    return jnp.asarray(its.pad_to(vals, size)), tp.n
+
+
+def _intersect_part(part: IndexPart, term_ids: list[int], codec,
+                    use_packed_gallop: bool = True, cache=None):
+    """Returns (padded candidate vals, count) or ('bitmap', words)."""
+    def decode(tid, tp):
+        if cache is not None:
+            hit = cache.get((id(part), tid))
+            if hit is not None:
+                return hit
+        out = _decode_padded(codec, tp)
+        if cache is not None:
+            cache.put((id(part), tid), out[0], out[1])
+        return out
+
+    tps = [part.terms[t] for t in term_ids]
+    if any(tp.kind == "empty" for tp in tps):
+        return None, 0
+    lists = sorted((tp for tp in tps if tp.kind == "list"), key=lambda t: t.n)
+    bitmaps = [tp for tp in tps if tp.kind == "bitmap"]
+
+    if not lists:
+        words = bitmaps[0].payload
+        for tp in bitmaps[1:]:
+            words = np.asarray(bm.bitmap_and(jnp.asarray(words),
+                                             jnp.asarray(tp.payload)))
+        return ("bitmap", words), int(bm.popcount(jnp.asarray(words)))
+
+    id_of = {id(tp): t for t, tp in zip(term_ids, tps)}
+    r, r_count = decode(id_of[id(lists[0])], lists[0])
+    for tp in lists[1:]:
+        if r_count == 0:
+            break
+        ratio = tp.n / max(r_count, 1)
+        if (cache is None and use_packed_gallop
+                and isinstance(tp.payload, bitpack.PackedList)
+                and ratio > its.TILED_MAX_RATIO):
+            # paper's galloping+skip: search the block-max index, decode only
+            # candidate blocks — the long list is never fully decoded.
+            mask = its.intersect_packed(r, tp.payload)
+        else:
+            f, _ = decode(id_of[id(tp)], tp)
+            mask = its.intersect_auto(r, f, r_count, tp.n)
+        r, cnt = its.compact(r, mask)
+        r_count = int(cnt)
+    for tp in bitmaps:
+        if r_count == 0:
+            break
+        mask = bm.probe(jnp.asarray(tp.payload), r, r != its.SENTINEL)
+        r, cnt = its.compact(r, mask)
+        r_count = int(cnt)
+    return ("list", r), r_count
+
+
+def query(index: HybridIndex, term_ids: list[int],
+          max_results: int = 1 << 16, cache: "DecodeCache | None" = None
+          ) -> QueryResult:
+    """cache: optional DecodeCache → the paper's Table 4 regime (SvS over
+    already-decoded lists); None → Table 5 regime (decode per query)."""
+    codec = codec_lib.get_codec(index.codec_name)
+    total = 0
+    out_docs = []
+    for part in index.parts:
+        res, cnt = _intersect_part(part, term_ids, codec, cache=cache)
+        total += cnt
+        if cnt and res is not None:
+            kind, payload = res
+            if kind == "list":
+                docs = np.asarray(payload)[:cnt]
+            else:
+                docs = bm.extract_np(payload)
+            out_docs.append(docs.astype(np.int64) + part.doc_lo)
+    docs = (np.concatenate(out_docs) if out_docs
+            else np.zeros(0, np.int64))[:max_results]
+    return QueryResult(count=total, docs=docs)
+
+
+def brute_force(postings: list[np.ndarray], term_ids: list[int]) -> np.ndarray:
+    """Oracle: numpy set intersection over the raw posting lists."""
+    res = postings[term_ids[0]]
+    for t in term_ids[1:]:
+        res = np.intersect1d(res, postings[t])
+    return res

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: integrated bit-unpack + prefix sum (paper Algorithm 1).
+
+One grid step decodes one block: a (32, 128) packed-word VMEM tile (only the
+first ``b`` rows carry data) → a (32, 128) value tile.  The prefix sum is
+computed *in the same pass* as the unpacking, row by row, exactly as the
+paper's integrated variant: per output row ``t ← (y[w] ≫ sh) | (y[w+1] ≪
+(32−sh)) & M;  t ← P(t, v); v ← t`` — where P is selected by the delta mode.
+The two-pass ("-NI") comparison point materializes deltas first (see ops.py).
+
+Working set per grid step: 32·128·4 B in + 32·128·4 B out = 32 KiB ≪ VMEM.
+Bit widths and seeds ride in scalar-prefetch (SMEM), mirroring the paper's
+per-block metadata bytes.
+
+Validated against ``ref.unpack_blocks_ref`` (pure jnp) in interpret mode for
+every bit width b ∈ [0, 32] × every delta mode (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+ROWS = 32
+LANES = 128
+
+
+def _lane_cumsum(row):
+    """Inclusive cumsum over 128 lanes via log2(128)=7 shift-adds
+    (Hillis–Steele; TPU-friendly: pad+add, no scatter)."""
+    x = row
+    for k in (1, 2, 4, 8, 16, 32, 64):
+        x = x + jnp.pad(x, (k, 0))[:LANES]
+    return x
+
+
+def _stride_cumsum(row, s: int, carry):
+    """Per-row stride-s chain cumsum. carry: (s,) running value per phase.
+    Returns (new_row, new_carry)."""
+    C = LANES // s
+    m = row.reshape(C, s)
+    pc = jnp.cumsum(m, axis=0, dtype=jnp.uint32)
+    out = pc + carry[None, :]
+    return out.reshape(LANES), out.reshape(LANES // s, s)[-1]
+
+
+def make_unpack_kernel(mode: str):
+    """Build the Algorithm-1 kernel body for one delta mode P."""
+
+    def kernel(widths_ref, seeds_ref, words_ref, out_ref):
+        k = pl.program_id(0)
+        b = widths_ref[k].astype(jnp.uint32)
+        seed = seeds_ref[k]
+        words = words_ref[0]                       # (32, 128) uint32
+        mask = jnp.where(b >= 32, jnp.uint32(0xFFFFFFFF),
+                         (jnp.uint32(1) << jnp.minimum(b, 31)) - 1)
+
+        # prefix-sum state v (paper: "seed vector v")
+        if mode == "dv":
+            carry = jnp.full((LANES,), seed, dtype=jnp.uint32)
+        elif mode in ("d2", "d4"):
+            s = {"d2": 2, "d4": 4}[mode]
+            carry = jnp.full((s,), seed, dtype=jnp.uint32)
+        else:                                      # d1 / dm / none: scalar
+            carry = seed
+
+        out = jnp.zeros((ROWS, LANES), dtype=jnp.uint32)
+        for r in range(ROWS):                      # static unroll, as in the
+            start = jnp.uint32(r) * b              # paper's generated code
+            w = (start >> 5).astype(jnp.int32)
+            sh = start & 31
+            lo = lax.dynamic_index_in_dim(words, w, axis=0, keepdims=False)
+            hi = lax.dynamic_index_in_dim(
+                words, jnp.minimum(w + 1, ROWS - 1), axis=0, keepdims=False)
+            spill = (sh + b) > 32
+            t = lo >> sh
+            t = jnp.where(spill, t | (hi << ((jnp.uint32(32) - sh) & 31)), t)
+            t = t & mask                           # single reusable mask (§4)
+
+            # t ← P(t, v);  v ← t
+            if mode == "none":
+                row = t
+            elif mode == "dv":
+                row = t + carry
+                carry = row
+            elif mode == "dm":
+                row = t + carry
+                carry = row[LANES - 1]
+            elif mode == "d1":
+                row = _lane_cumsum(t) + carry
+                carry = row[LANES - 1]
+            else:                                  # d2 / d4
+                row, carry = _stride_cumsum(t, carry.shape[0], carry)
+            out = lax.dynamic_update_index_in_dim(out, row, r, axis=0)
+        out_ref[0] = out
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def unpack_blocks(padded_words, widths, seeds, mode: str = "d1",
+                  interpret: bool = True):
+    """padded_words: (K, 32, 128) uint32 (block-padded packed words);
+    widths, seeds: (K,).  Returns (K, 32, 128) uint32 decoded values."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    K = padded_words.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # widths, seeds → SMEM
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, ROWS, LANES), lambda k, *_: (k, 0, 0))],
+        out_specs=pl.BlockSpec((1, ROWS, LANES), lambda k, *_: (k, 0, 0)),
+    )
+    kernel = make_unpack_kernel(mode)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, ROWS, LANES), jnp.uint32),
+        interpret=interpret,
+    )(widths.astype(jnp.int32), seeds.astype(jnp.uint32),
+      padded_words.astype(jnp.uint32))

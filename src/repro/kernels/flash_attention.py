@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: flash attention forward (GQA-aware, causal/decode
+masks) — the §Roofline "next lever" for every attention-bearing cell: the
+(B, H, Sq, Sk) score tensor never leaves VMEM, removing the largest
+materialized-buffer class from the memory roofline term (EXPERIMENTS
+§Roofline last column; phi3/gemma train cells).
+
+Canonical Pallas flash structure: grid (B, H, nq, nk) with the online-softmax
+state (m, l, acc) in VMEM scratch carried across the (sequential) nk
+dimension; KV tiles stream through VMEM BlockSpecs; GQA maps query head h to
+KV head h // (H / H_kv) in the index maps.
+
+Working set per grid step: q (bq, D) + k/v (bk, D) + acc (bq, D) + scores
+(bq, bk), all f32: bq=bk=512, D=256 → ~3.3 MiB ≪ 16 MiB VMEM.
+
+Forward-only (serving path; training uses XLA attention + remat until a bwd
+kernel lands).  Validated against layers.attention_full in interpret mode
+across GQA ratios, causal/full, ragged lengths (tests/test_flash_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, bq: int, bk: int,
+                  n_k: int, kv_len: int | None):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if kv_len is not None:                           # decode/ragged masking
+        mask = mask & (k_pos < kv_len)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                              # (bq,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "kv_len", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, kv_len: int | None = None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D) with H % Hkv == 0.
+
+    Returns (B, Sq, H, D).  kv_len masks positions ≥ kv_len (decode)."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert H % Hkv == 0
+    n_rep = H // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, "pad sequences to block multiples"
+    n_q, n_k = Sq // bq, Sk // bk
+    scale = 1.0 / np.sqrt(D)
+
+    # layout: (B, H, S, D) per-head tiles
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk, n_k=n_k,
+        kv_len=kv_len)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, n_rep=n_rep: (b, h // n_rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, n_rep=n_rep: (b, h // n_rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # m: running max
+            pltpu.VMEM((bq,), jnp.float32),      # l: running denominator
+            pltpu.VMEM((bq, D), jnp.float32),    # acc: running numerator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

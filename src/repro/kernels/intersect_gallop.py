@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: SIMD Galloping intersection (paper §5, Algorithm 4).
+
+TPU adaptation (DESIGN.md §2.4): the paper gallops serially per element of the
+short list; here one grid step takes a 128-lane tile of the short list ``r``
+and runs **128 binary searches in parallel** against the long list ``f`` held
+in VMEM — log2(N) rounds of branchless lower-bound probing (vector gathers),
+then one gather + compare for the membership test.  Same O(m/τ · log n)
+complexity as Algorithm 4 at τ = 128 with the doubling phase replaced by
+full binary search (depth-optimal on vectors; sequential doubling has no TPU
+advantage).
+
+VMEM budget: f must fit in VMEM (N ≤ 2**20 → 4 MiB).  Longer lists go through
+``ops.intersect_gallop`` which first searches the block-max skip index (this
+kernel again) and then probes candidate blocks.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 128
+SENTINEL = np.int32(2**31 - 1)
+
+
+def make_gallop_kernel(log2n: int):
+    def kernel(r_ref, f_ref, out_ref):
+        r = r_ref[...]                               # (TILE_R,) int32
+        f = f_ref[...]                               # (N,) int32, N = 2**log2n
+        lo = jnp.full((TILE_R,), -1, dtype=jnp.int32)
+        for k in range(log2n - 1, -1, -1):           # branchless lower_bound
+            probe = lo + (1 << k)
+            vals = jnp.take(f, probe)                # vector gather from VMEM
+            lo = jnp.where(vals < r, probe, lo)
+        pos = jnp.minimum(lo + 1, (1 << log2n) - 1)
+        hit = (jnp.take(f, pos) == r) & (r != SENTINEL)
+        out_ref[...] = hit
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gallop_tiles(r, f, interpret: bool = True):
+    """r: (M,) int32 sentinel-padded, M % 128 == 0; f: (N,) int32 sentinel-
+    padded, N a power of two. Returns (M,) bool match mask."""
+    M, N = r.shape[0], f.shape[0]
+    assert M % TILE_R == 0
+    log2n = int(np.log2(N))
+    assert (1 << log2n) == N, "f must be padded to a power of two"
+    grid_spec = pl.GridSpec(
+        grid=(M // TILE_R,),
+        in_specs=[
+            pl.BlockSpec((TILE_R,), lambda i: (i,)),
+            pl.BlockSpec((N,), lambda i: (0,)),      # f resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((TILE_R,), lambda i: (i,)),
+    )
+    return pl.pallas_call(
+        make_gallop_kernel(log2n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.bool_),
+        interpret=interpret,
+    )(r.astype(jnp.int32), f.astype(jnp.int32))

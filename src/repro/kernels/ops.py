@@ -1,0 +1,114 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``INTERPRET`` defaults to True (this container is CPU-only; the kernels target
+TPU v5e).  On real hardware set ``repro.kernels.ops.INTERPRET = False`` or the
+REPRO_PALLAS_INTERPRET=0 env var.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack as core_bitpack
+from repro.core import deltas as core_deltas
+from repro.core.intersect import SENTINEL, pad_to, pow2_bucket  # noqa: F401
+from repro.kernels import bitunpack as _bitunpack
+from repro.kernels import bitpack_pack as _bitpack_pack
+from repro.kernels import intersect_gallop as _intersect_gallop
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+ROWS = _bitunpack.ROWS
+LANES = _bitunpack.LANES
+GALLOP_VMEM_CAP = 1 << 20          # max f ints resident in VMEM (4 MiB)
+
+
+# --------------------------------------------------------------------------
+# padding helpers (flat packed words ↔ block-padded kernel layout)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def pad_packed(flat_words, offsets):
+    """Gather flat (T,128) packed words into (K, 32, 128) block-padded form."""
+    T = flat_words.shape[0]
+    idx = jnp.clip(offsets[:, None] + jnp.arange(ROWS, dtype=jnp.int32)[None],
+                   0, T - 1)
+    return jnp.take(flat_words, idx, axis=0)
+
+
+# --------------------------------------------------------------------------
+# decode / encode
+# --------------------------------------------------------------------------
+
+def unpack_blocks(padded_words, widths, seeds, mode: str = "d1"):
+    return _bitunpack.unpack_blocks(padded_words, widths, seeds, mode=mode,
+                                    interpret=INTERPRET)
+
+
+def decode_packed(plist: core_bitpack.PackedList) -> jnp.ndarray:
+    """Kernel-path decode of a PackedList → flat padded values."""
+    assert plist.block_rows == ROWS, \
+        "Pallas kernels are specialized to 32-row (4096-int) blocks"
+    padded = pad_packed(plist.flat_words, plist.offsets)
+    seeds = core_bitpack.seeds_of(plist)
+    vals = unpack_blocks(padded, plist.widths, seeds, mode=plist.mode)
+    return vals.reshape(-1)
+
+
+def decode_packed_ni(plist: core_bitpack.PackedList) -> jnp.ndarray:
+    """Two-pass (-NI) kernel decode: unpack (mode='none') then a separate
+    prefix-sum pass — the paper's Fig. 1a comparison point."""
+    padded = pad_packed(plist.flat_words, plist.offsets)
+    seeds = core_bitpack.seeds_of(plist)
+    zero_seeds = jnp.zeros_like(seeds)
+    d = unpack_blocks(padded, plist.widths, zero_seeds, mode="none")
+    jax.block_until_ready(d)
+    return core_deltas.prefix_sum(d, seeds, plist.mode).reshape(-1)
+
+
+def pack_blocks(values, seeds, widths, mode: str = "d1"):
+    """values: (K, 32, 128) uint32 sorted; returns (K, 32, 128) padded words."""
+    d = core_deltas.encode_deltas_jnp(values, seeds, mode)
+    return _bitpack_pack.pack_blocks_padded(d, widths, interpret=INTERPRET)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, kv_len=None,
+                    bq: int = 512, bk: int = 512):
+    """Flash attention fwd (GQA-aware); see kernels/flash_attention.py."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    return _fa(q, k, v, causal=causal, kv_len=kv_len, bq=bq, bk=bk,
+               interpret=INTERPRET)
+
+
+# --------------------------------------------------------------------------
+# intersection
+# --------------------------------------------------------------------------
+
+def intersect_gallop(r, f):
+    """Kernel-path galloping intersection; falls back to two-level block-skip
+    probing when f exceeds the VMEM cap (DESIGN.md §2.4)."""
+    M = r.shape[0]
+    m_pad = (-M) % _intersect_gallop.TILE_R
+    if m_pad:
+        r = jnp.concatenate(
+            [r, jnp.full((m_pad,), SENTINEL, dtype=jnp.int32)])
+    N = f.shape[0]
+    n_pow = pow2_bucket(N, floor=_intersect_gallop.TILE_R)
+    if n_pow > GALLOP_VMEM_CAP:
+        from repro.core import intersect as core_intersect
+        mask = core_intersect.intersect_gallop(r, f)
+        return mask[:M]
+    if n_pow != N:
+        f = jnp.concatenate(
+            [f, jnp.full((n_pow - N,), SENTINEL, dtype=jnp.int32)])
+    mask = _intersect_gallop.gallop_tiles(r, f, interpret=INTERPRET)
+    return mask[:M]

@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes; record memory/cost analysis + collective bytes.
+
+Cost accounting note (EXPERIMENTS §Dry-run): XLA's cost_analysis counts a
+while-loop body ONCE regardless of trip count, so scanned-over-layers models
+would be undercounted.  For LM cells we therefore compile two *unrolled*
+probes (n_layers=1 and n_layers=2, all inner scans unrolled) and extrapolate
+linearly — exact for layer-homogeneous stacks: v(L) = v1 + (L-1)·(v2-v1).
+The full-depth scan compile is still performed and provides memory_analysis
+(the fits-on-chip proof) and the compile-health check.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+      --shape train_4k --mesh pod --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+
+One (arch, shape, mesh) per process (jax fixes the device count at first
+init; scripts/run_dryruns.sh loops cells as subprocesses).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+
+def _compile_cell(cell, mesh):
+    import jax
+    kw = {}
+    if cell.out_shardings is not None:
+        kw["out_shardings"] = cell.out_shardings
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings, **kw)
+        lowered = jitted.lower(*cell.in_specs)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _costs(compiled):
+    from repro.launch import roofline
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    coll = roofline.collective_bytes(hlo)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "materialized_bytes": roofline.materialized_bytes(hlo),
+            "collective_bytes": coll}
+
+
+def _extrapolate(v1: dict, v2: dict, L: int) -> dict:
+    def lin(a, b):
+        return a + (L - 1) * (b - a)
+    coll = {}
+    for k in v1["collective_bytes"]:
+        if k == "counts":
+            coll[k] = {kk: int(lin(v1["collective_bytes"][k][kk],
+                                   v2["collective_bytes"][k][kk]))
+                       for kk in v1["collective_bytes"][k]}
+        else:
+            coll[k] = int(lin(v1["collective_bytes"][k],
+                              v2["collective_bytes"][k]))
+    return {"flops": lin(v1["flops"], v2["flops"]),
+            "bytes_accessed": lin(v1["bytes_accessed"], v2["bytes_accessed"]),
+            "materialized_bytes": int(lin(v1["materialized_bytes"],
+                                          v2["materialized_bytes"])),
+            "collective_bytes": coll}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str | None,
+             verbose: bool = True, skip_full: bool = False) -> dict:
+    import jax
+    from repro.configs.base import get_config
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    spec = get_config(arch)
+    n_chips = len(mesh.devices.ravel())
+
+    timings = {}
+    mem = None
+    if not skip_full:
+        cell = build_cell(spec, shape, mesh)
+        t0 = time.monotonic()
+        compiled = _compile_cell(cell, mesh)
+        timings["full_compile_s"] = round(time.monotonic() - t0, 2)
+        mem = compiled.memory_analysis()
+        full_costs = _costs(compiled)
+    else:
+        cell = build_cell(spec, shape, mesh)
+        full_costs = None
+
+    if spec.family == "lm":
+        # unrolled L=1 / L=2 probes → exact per-layer extrapolation
+        probes = {}
+        for L in (1, 2):
+            pcfg = dataclasses.replace(spec.config, n_layers=L,
+                                       unroll_scan=True)
+            pspec = dataclasses.replace(spec, config=pcfg)
+            pcell = build_cell(pspec, shape, mesh)
+            t0 = time.monotonic()
+            pc = _compile_cell(pcell, mesh)
+            timings[f"probe{L}_compile_s"] = round(time.monotonic() - t0, 2)
+            probes[L] = _costs(pc)
+        costs = _extrapolate(probes[1], probes[2], spec.config.n_layers)
+        costs["scan_body_costs"] = full_costs
+    else:
+        costs = full_costs if full_costs is not None else _costs(
+            _compile_cell(cell, mesh))
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "n_devices": n_chips,
+        **{k: costs[k] for k in ("flops", "bytes_accessed",
+                                 "materialized_bytes", "collective_bytes")},
+        "memory": ({
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        } if mem is not None else None),
+        "model_flops": cell.static_meta.get("model_flops", 0),
+        "timings": timings,
+        "ok": True,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} × {mesh_kind}: OK  {timings}")
+        if mem is not None:
+            print(f"  memory_analysis: args={mem.argument_size_in_bytes:,} "
+                  f"temp={mem.temp_size_in_bytes:,} "
+                  f"out={mem.output_size_in_bytes:,}")
+        print(f"  cost_analysis (per-device): flops={result['flops']:.3e} "
+              f"bytes={result['bytes_accessed']:.3e}")
+        print(f"  collective_bytes: {result['collective_bytes']['total']:,}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}.json")
+        with open(fn, "w") as fh:
+            json.dump(result, fh, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str)
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--skip-full", action="store_true",
+                    help="probes only (costs, no memory analysis)")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        from repro.configs.base import all_arch_ids, get_config
+        for a in all_arch_ids():
+            print(a, "→", ", ".join(get_config(a).shapes))
+        return
+
+    try:
+        run_cell(args.arch, args.shape, args.mesh, args.out,
+                 skip_full=args.skip_full)
+    except Exception:
+        traceback.print_exc()
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            fn = os.path.join(
+                args.out, f"{args.arch}__{args.shape}__{args.mesh}.json")
+            with open(fn, "w") as fh:
+                json.dump({"arch": args.arch, "shape": args.shape,
+                           "mesh": args.mesh, "ok": False,
+                           "error": traceback.format_exc()}, fh, indent=1)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Training launcher: ``--arch <id>`` selects an assigned architecture at its
+*smoke-reduced* size for local runs (full sizes are dry-run-only on CPU).
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --steps 100 --ckpt-dir /tmp/ck
+
+On a real cluster this module is invoked once per host under
+``jax.distributed.initialize()``; the mesh comes from launch.mesh and the
+shardings from launch.cells — identical code paths to the dry-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data import graph_data, lm_data, recsys_data
+from repro.optim import adamw
+from repro.train import steps as train_steps
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _lm_setup(cfg, batch, seq):
+    from repro.models.transformer import init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    stream = lm_data.TokenStream(cfg.vocab, seed=0)
+
+    def it():
+        while True:
+            b = stream.batch(batch, seq)
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    opt_cfg = adamw.AdamWConfig(lr=3e-3)
+    return params, train_steps.make_lm_train_step(cfg, opt_cfg), it(), opt_cfg
+
+
+def _gnn_setup(cfg, batch, _seq):
+    from repro.models import gnn
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    g = graph_data.synthetic_graph(5000, 10, d_feat=cfg.d_feat,
+                                   n_classes=cfg.n_classes)
+    rng = np.random.default_rng(0)
+
+    def it():
+        while True:
+            seeds = rng.integers(0, 5000, size=batch).astype(np.int32)
+            yield {"feats": jnp.asarray(g["x"]),
+                   "indptr": jnp.asarray(g["indptr"]),
+                   "indices": jnp.asarray(g["indices"]),
+                   "seeds": jnp.asarray(seeds),
+                   "labels": jnp.asarray(g["labels"][seeds])}
+
+    opt_cfg = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0)
+    return params, train_steps.make_gnn_train_step(
+        cfg, "minibatch", opt_cfg, fanout=(10, 5)), it(), opt_cfg
+
+
+def _recsys_setup(cfg, batch, _seq):
+    from repro.models import recsys
+    params = recsys.INIT[cfg.arch](jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    mk = {"din": recsys_data.din_batch, "sasrec": recsys_data.seq_batch,
+          "bert4rec": recsys_data.bert4rec_batch,
+          "mind": recsys_data.mind_batch}[cfg.arch]
+
+    def it():
+        while True:
+            yield {k: jnp.asarray(v) for k, v in mk(rng, cfg, batch).items()}
+
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, weight_decay=0.0)
+    return params, train_steps.make_recsys_train_step(cfg, opt_cfg), it(), \
+        opt_cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    spec = get_config(args.arch)
+    cfg = spec.smoke_config()
+    setup = {"lm": _lm_setup, "gnn": _gnn_setup,
+             "recsys": _recsys_setup}[spec.family]
+    params, step, data, opt_cfg = setup(cfg, args.batch, args.seq)
+    trainer = Trainer(step, params, adamw.init(params, opt_cfg), data,
+                      TrainerConfig(total_steps=args.steps,
+                                    ckpt_every=args.ckpt_every,
+                                    ckpt_dir=args.ckpt_dir, log_every=10))
+    trainer.install_preemption_handler()
+    res = trainer.run(start_step=trainer.try_restore())
+    print(f"[train] {args.arch}: {res}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""GraphSAGE (mean aggregator) — full-batch, sampled-minibatch, and
+batched-small-graph variants.
+
+Message passing is implemented with ``jnp.take`` + ``jax.ops.segment_sum``
+over an edge index (JAX has no CSR SpMM; the scatter path IS the system — see
+kernel_taxonomy §GNN).  The neighbor sampler is a real uniform-with-
+replacement sampler over CSR adjacency, jit-compatible (used inside the
+minibatch train step).  Adjacency rows are sorted integer lists and are
+stored compressed with the paper's codec in the data pipeline
+(repro/data/graph_data.py) — the paper's technique applied to GNN substrate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_feat: int = 602
+    n_classes: int = 41
+    aggregator: str = "mean"
+    sample_sizes: tuple[int, ...] = (25, 10)
+    task: str = "node"           # 'node' | 'graph'
+    compute_dtype: str = "float32"
+
+
+def init_params(rng, cfg: GNNConfig):
+    keys = jax.random.split(rng, cfg.n_layers * 2 + 2)
+    params = {"layers": []}
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        s = 1.0 / np.sqrt(d_in)
+        params["layers"].append({
+            "w_self": jax.random.normal(keys[2 * i], (d_in, cfg.d_hidden)) * s,
+            "w_neigh": jax.random.normal(keys[2 * i + 1],
+                                         (d_in, cfg.d_hidden)) * s,
+            "b": jnp.zeros((cfg.d_hidden,)),
+        })
+        d_in = cfg.d_hidden
+    s = 1.0 / np.sqrt(d_in)
+    params["head"] = jax.random.normal(keys[-1], (d_in, cfg.n_classes)) * s
+    return params
+
+
+def _sage_layer(lp, h, h_neigh_mean, act=True):
+    out = h @ lp["w_self"] + h_neigh_mean @ lp["w_neigh"] + lp["b"]
+    if act:
+        out = jax.nn.relu(out)
+    # L2-normalize as in the paper (GraphSAGE §3.1)
+    return out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# full-batch (full_graph_sm / ogb_products)
+# ---------------------------------------------------------------------------
+
+def full_graph_forward(params, x, edge_src, edge_dst, cfg: GNNConfig):
+    """x: (N, F); edge_src/dst: (E,) int32 (messages flow src → dst)."""
+    N = x.shape[0]
+    deg = jax.ops.segment_sum(jnp.ones_like(edge_dst, dtype=jnp.float32),
+                              edge_dst, num_segments=N)
+    inv_deg = 1.0 / jnp.maximum(deg, 1.0)
+    h = x
+    for i, lp in enumerate(params["layers"]):
+        msg = jax.ops.segment_sum(jnp.take(h, edge_src, axis=0), edge_dst,
+                                  num_segments=N)
+        h = _sage_layer(lp, h, msg * inv_deg[:, None],
+                        act=i < len(params["layers"]) - 1)
+    return h @ params["head"]
+
+
+def node_loss(params, batch, cfg: GNNConfig):
+    logits = full_graph_forward(params, batch["x"], batch["edge_src"],
+                                batch["edge_dst"], cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    mask = batch["train_mask"].astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0), {}
+
+
+# ---------------------------------------------------------------------------
+# neighbor sampler + sampled minibatch (minibatch_lg)
+# ---------------------------------------------------------------------------
+
+def sample_neighbors(rng, indptr, indices, nodes, fanout: int):
+    """Uniform-with-replacement neighbor sampling from CSR.
+
+    nodes: (M,) → (M, fanout) sampled neighbor ids (self-loop if degree 0)."""
+    deg = jnp.take(indptr, nodes + 1) - jnp.take(indptr, nodes)
+    r = jax.random.randint(rng, nodes.shape + (fanout,), 0, 1 << 30)
+    off = r % jnp.maximum(deg, 1)[:, None]
+    idx = jnp.take(indptr, nodes)[:, None] + off
+    nbr = jnp.take(indices, jnp.clip(idx, 0, indices.shape[0] - 1))
+    return jnp.where(deg[:, None] > 0, nbr, nodes[:, None])
+
+
+def minibatch_forward(params, feats, indptr, indices, seeds, rng,
+                      cfg: GNNConfig, fanout: tuple[int, ...]):
+    """2-hop sampled GraphSAGE forward for seed nodes.
+
+    feats: (N, F) full feature table; seeds: (B,)."""
+    B = seeds.shape[0]
+    k1, k2 = jax.random.split(rng)
+    l1 = sample_neighbors(k1, indptr, indices, seeds, fanout[0])     # (B,f1)
+    l2 = sample_neighbors(k2, indptr, indices, l1.reshape(-1),
+                          fanout[1]).reshape(B, fanout[0], fanout[1])
+
+    h_seed = jnp.take(feats, seeds, axis=0)                  # (B,F)
+    h_l1 = jnp.take(feats, l1, axis=0)                       # (B,f1,F)
+    h_l2 = jnp.take(feats, l2, axis=0)                       # (B,f1,f2,F)
+
+    lp0, lp1 = params["layers"][0], params["layers"][1]
+    # hop-2 → hop-1 (layer 0 applied to l1 nodes)
+    h_l1_new = _sage_layer(lp0, h_l1, h_l2.mean(axis=2), act=True)
+    # hop-1 → seeds (layer 0 applied to seeds)
+    h_seed_new = _sage_layer(lp0, h_seed, h_l1.mean(axis=1), act=True)
+    # layer 1 on seeds with aggregated new hop-1 states
+    h_final = _sage_layer(lp1, h_seed_new, h_l1_new.mean(axis=1), act=False)
+    return h_final @ params["head"]
+
+
+def minibatch_loss(params, batch, rng, cfg: GNNConfig,
+                   fanout: tuple[int, ...]):
+    logits = minibatch_forward(params, batch["feats"], batch["indptr"],
+                               batch["indices"], batch["seeds"], rng, cfg,
+                               fanout)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    return nll.mean(), {}
+
+
+# ---------------------------------------------------------------------------
+# batched small graphs (molecule)
+# ---------------------------------------------------------------------------
+
+def molecule_forward(params, x, edge_src, edge_dst, node_mask, cfg: GNNConfig):
+    """x: (G, n, F); edges: (G, e) int32 per-graph local ids; node_mask (G,n)."""
+
+    def one(xg, src, dst, mask):
+        n = xg.shape[0]
+        deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst,
+                                  num_segments=n)
+        inv = 1.0 / jnp.maximum(deg, 1.0)
+        h = xg
+        for i, lp in enumerate(params["layers"]):
+            msg = jax.ops.segment_sum(jnp.take(h, src, axis=0), dst,
+                                      num_segments=n)
+            h = _sage_layer(lp, h, msg * inv[:, None], act=True)
+        pooled = (h * mask[:, None]).sum(0) / jnp.maximum(mask.sum(), 1.0)
+        return pooled
+
+    pooled = jax.vmap(one)(x, edge_src, edge_dst, node_mask)   # (G, d)
+    return pooled @ params["head"]
+
+
+def molecule_loss(params, batch, cfg: GNNConfig):
+    pred = molecule_forward(params, batch["x"], batch["edge_src"],
+                            batch["edge_dst"], batch["node_mask"], cfg)
+    err = (pred[:, 0] - batch["targets"]) ** 2
+    return err.mean(), {}

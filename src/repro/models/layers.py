@@ -1,0 +1,152 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full / chunked /
+decode), GLU MLPs.  Pure functions over parameter pytrees; bf16 compute with
+f32 accumulation.  Chunked attention implements the online-softmax (flash)
+recurrence in lax.scan so 32k–500k contexts never materialize (S, S) scores.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_angles(positions, head_dim: int, theta: float = 10000.0):
+    """positions: (...,) int32 → cos, sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-np.arange(0, half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (..., S, D//2) → rotated x."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]      # broadcast over heads
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention_full(q, k, v, causal: bool = True, q_offset: int = 0,
+                   scores_dtype=jnp.float32):
+    """q: (B, Sq, H, D), k/v: (B, Sk, Hkv, D). Materializes (Sq, Sk) scores —
+    used for short sequences; long contexts use attention_chunked.
+
+    scores_dtype=bf16 halves the dominant memory-roofline buffer class for
+    training shapes (EXPERIMENTS §Perf iteration 7); f32 is the default for
+    softmax fidelity.  (The production TPU answer is a flash kernel that
+    keeps scores VMEM-resident; traffic numbers here assume no such kernel.)
+    """
+    B, Sq, H, D = q.shape
+    n_rep = H // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=scores_dtype) * scale
+    logits = logits.astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(qpos >= kpos, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_chunked(q, k, v, chunk: int = 1024, causal: bool = True,
+                      unroll: bool = False):
+    """Online-softmax attention (flash recurrence, lax.scan over KV chunks).
+    Never materializes more than (B, H, Sq_blk, chunk) scores."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    n_rep = H // k.shape[2]
+    scale = 1.0 / np.sqrt(D)
+    n_chunks = Sk // chunk
+    assert Sk % chunk == 0, "pad KV to chunk multiple"
+    kc = k.reshape(B, n_chunks, chunk, k.shape[2], D)
+    vc = v.reshape(B, n_chunks, chunk, v.shape[2], D)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        idx, kb, vb = inputs
+        kb = _repeat_kv(kb, n_rep)
+        vb = _repeat_kv(vb, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = jnp.arange(Sq)[:, None]
+            kpos = idx * chunk + jnp.arange(chunk)[None, :]
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks), kc.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4)),
+        unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B, Sq, H, D)
+
+
+def attention_decode(q, k_cache, v_cache, length):
+    """Single-token decode: q (B, 1, H, D) vs cache (B, S, Hkv, D); positions
+    ≥ length are masked. O(S·D) per head — linear, not quadratic (DESIGN.md
+    long_500k note).
+
+    Sharding (flash-decoding split-K; EXPERIMENTS §Perf iteration 8): q is
+    replicated over 'model' and logits pinned S-sharded — without the hints
+    the partitioner all-gathers the full KV cache to satisfy head-sharded
+    logits (measured 215 GB of collectives per decoded token at 500k)."""
+    from repro.distributed.sharding import shard_hint
+    B, _, H, D = q.shape
+    n_rep = H // k_cache.shape[2]
+    q = shard_hint(q, "decode_q")
+    k = _repeat_kv(k_cache, n_rep)
+    v = _repeat_kv(v_cache, n_rep)
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = shard_hint(logits, "decode_logits")
+    mask = jnp.arange(k.shape[1])[None, None, None, :] < length
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def glu_mlp(x, w_in, w_gate, w_out, act: str):
+    """GeGLU (gemma) / SwiGLU (llama-family) feed-forward."""
+    h = jnp.einsum("...d,df->...f", x, w_in.astype(x.dtype))
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    g = jax.nn.gelu(g) if act == "geglu" else jax.nn.silu(g)
+    return jnp.einsum("...f,fd->...d", h * g, w_out.astype(x.dtype))

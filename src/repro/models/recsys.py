@@ -1,0 +1,352 @@
+"""RecSys architectures: DIN, SASRec, BERT4Rec, MIND.
+
+Common substrate: huge sparse embedding tables + EmbeddingBag implemented
+with ``jnp.take`` + masked segment reductions (JAX has no native
+EmbeddingBag — this is part of the system, per the assignment brief).  Tables
+are column-sharded over 'model' under pjit (indices replicated, gathers stay
+local — DESIGN.md §4).
+
+Entry points per model: ``init_params``, ``train_loss`` (train_batch shape),
+``score`` (serve_p99 / serve_bulk: pointwise CTR/next-item scores), and
+``retrieval_scores`` (retrieval_cand: one user vs n_candidates, dot-product
+scoring + top-k; candidate *generation* by posting-list intersection lives in
+repro/index and examples/recsys_retrieval.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    arch: str                       # 'din' | 'sasrec' | 'bert4rec' | 'mind'
+    n_items: int = 1 << 20
+    n_cates: int = 1 << 12
+    embed_dim: int = 64
+    seq_len: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    attn_mlp: tuple[int, ...] = (80, 40)     # DIN attention MLP
+    mlp: tuple[int, ...] = (200, 80)         # DIN prediction MLP
+    n_interests: int = 4                     # MIND
+    capsule_iters: int = 3                   # MIND
+    n_neg: int = 127                         # sampled-softmax negatives
+    compute_dtype: str = "float32"
+
+
+# ---------------------------------------------------------------------------
+# embedding substrate
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table, ids, mask, mode: str = "mean"):
+    """EmbeddingBag: (B, L) ids + (B, L) mask → (B, d). take + segment-style
+    masked reduce (no native op in JAX)."""
+    e = jnp.take(table, ids, axis=0)                 # (B, L, d)
+    m = mask[..., None].astype(e.dtype)
+    if mode == "sum":
+        return (e * m).sum(axis=1)
+    if mode == "max":
+        return jnp.where(m > 0, e, -jnp.inf).max(axis=1)
+    return (e * m).sum(axis=1) / jnp.maximum(m.sum(axis=1), 1.0)
+
+
+def _mlp(params, x, act=jax.nn.relu, final_act=False):
+    n = len(params)
+    for i, lp in enumerate(params):
+        x = x @ lp["w"] + lp["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def _init_mlp(rng, dims):
+    keys = jax.random.split(rng, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (dims[i], dims[i + 1]))
+             / np.sqrt(dims[i]),
+             "b": jnp.zeros((dims[i + 1],))}
+            for i, k in enumerate(keys)]
+
+
+def _init_table(rng, n, d):
+    """Rows padded to a 4096 multiple so huge tables row-shard cleanly under
+    any mesh axis size (padded ids are never emitted by the pipeline)."""
+    n_pad = int(np.ceil(n / 4096) * 4096)
+    return jax.random.normal(rng, (n_pad, d)) * (1.0 / np.sqrt(d))
+
+
+def _init_pos(rng, n, d):
+    """Positional embeddings: exact length, never padded."""
+    return jax.random.normal(rng, (n, d)) * (1.0 / np.sqrt(d))
+
+
+# ---------------------------------------------------------------------------
+# DIN — target attention CTR (arXiv:1706.06978)
+# ---------------------------------------------------------------------------
+
+def init_din(rng, cfg: RecsysConfig):
+    k = jax.random.split(rng, 5)
+    d = cfg.embed_dim
+    de = 2 * d                                    # item ⊕ cate
+    return {
+        "item_table": _init_table(k[0], cfg.n_items, d),
+        "cate_table": _init_table(k[1], cfg.n_cates, d),
+        "att_mlp": _init_mlp(k[2], (4 * de,) + cfg.attn_mlp + (1,)),
+        "pred_mlp": _init_mlp(k[3], (3 * de,) + cfg.mlp + (1,)),
+    }
+
+
+def _din_user_vec(params, hist_items, hist_cates, hist_mask, e_t):
+    eh = jnp.concatenate([jnp.take(params["item_table"], hist_items, axis=0),
+                          jnp.take(params["cate_table"], hist_cates, axis=0)],
+                         axis=-1)                                   # (B,L,2d)
+    et = e_t[:, None, :]
+    z = jnp.concatenate([eh, et * jnp.ones_like(eh), eh - et, eh * et], -1)
+    w = _mlp(params["att_mlp"], z, act=jax.nn.sigmoid)[..., 0]      # (B,L)
+    w = w * hist_mask                              # DIN: no softmax (paper §4)
+    return jnp.einsum("bl,bld->bd", w, eh)
+
+
+def din_score(params, batch, cfg: RecsysConfig):
+    e_t = jnp.concatenate(
+        [jnp.take(params["item_table"], batch["target_item"], axis=0),
+         jnp.take(params["cate_table"], batch["target_cate"], axis=0)], -1)
+    user = _din_user_vec(params, batch["hist_items"], batch["hist_cates"],
+                         batch["hist_mask"], e_t)
+    z = jnp.concatenate([user, e_t, user * e_t], -1)
+    return _mlp(params["pred_mlp"], z)[..., 0]     # logits (B,)
+
+
+def din_loss(params, batch, cfg: RecsysConfig):
+    logits = din_score(params, batch, cfg)
+    labels = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"logit_mean": logits.mean()}
+
+
+def din_retrieval(params, batch, cfg: RecsysConfig):
+    """1 user vs n_candidates: target attention per candidate."""
+    cand_items = batch["cand_items"]               # (C,)
+    cand_cates = batch["cand_cates"]
+    e_t = jnp.concatenate(
+        [jnp.take(params["item_table"], cand_items, axis=0),
+         jnp.take(params["cate_table"], cand_cates, axis=0)], -1)   # (C,2d)
+    user = _din_user_vec(
+        params,
+        jnp.broadcast_to(batch["hist_items"], (e_t.shape[0],
+                                               cfg.seq_len)),
+        jnp.broadcast_to(batch["hist_cates"], (e_t.shape[0], cfg.seq_len)),
+        jnp.broadcast_to(batch["hist_mask"], (e_t.shape[0], cfg.seq_len)),
+        e_t)
+    z = jnp.concatenate([user, e_t, user * e_t], -1)
+    return _mlp(params["pred_mlp"], z)[..., 0]     # (C,)
+
+
+# ---------------------------------------------------------------------------
+# SASRec — causal self-attention next-item (arXiv:1808.09781)
+# ---------------------------------------------------------------------------
+
+def _init_blocks(rng, n_blocks, d, n_heads, d_ff):
+    keys = jax.random.split(rng, n_blocks)
+    blocks = []
+    s = 1.0 / np.sqrt(d)
+    for k in keys:
+        k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
+        blocks.append({
+            "wq": jax.random.normal(k1, (d, d)) * s,
+            "wk": jax.random.normal(k2, (d, d)) * s,
+            "wv": jax.random.normal(k3, (d, d)) * s,
+            "wo": jax.random.normal(k4, (d, d)) * s,
+            "ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,)),
+            "ffn_in": jax.random.normal(k5, (d, d_ff)) * s,
+            "ffn_out": jax.random.normal(k6, (d_ff, d)) / np.sqrt(d_ff),
+        })
+    return blocks
+
+
+def _attn_blocks(blocks, x, n_heads, causal):
+    B, S, d = x.shape
+    hd = d // n_heads
+    for bp in blocks:
+        h = L.rms_norm(x, bp["ln1"])
+        q = (h @ bp["wq"]).reshape(B, S, n_heads, hd)
+        k = (h @ bp["wk"]).reshape(B, S, n_heads, hd)
+        v = (h @ bp["wv"]).reshape(B, S, n_heads, hd)
+        a = L.attention_full(q, k, v, causal=causal)
+        x = x + a.reshape(B, S, d) @ bp["wo"]
+        h = L.rms_norm(x, bp["ln2"])
+        x = x + jax.nn.relu(h @ bp["ffn_in"]) @ bp["ffn_out"]
+    return x
+
+
+def init_sasrec(rng, cfg: RecsysConfig):
+    k = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    return {
+        "item_table": _init_table(k[0], cfg.n_items + 1, d),  # +1 pad id
+        "pos_embed": _init_pos(k[1], cfg.seq_len, d),
+        "blocks": _init_blocks(k[2], cfg.n_blocks, d, cfg.n_heads, d),
+    }
+
+
+def sasrec_hidden(params, hist, mask, cfg: RecsysConfig):
+    x = jnp.take(params["item_table"], hist, axis=0)
+    x = x + params["pos_embed"][None]
+    x = x * mask[..., None]
+    return _attn_blocks(params["blocks"], x, cfg.n_heads, causal=True)
+
+
+def sasrec_loss(params, batch, cfg: RecsysConfig):
+    """Per-position next-item with one sampled negative (paper's objective)."""
+    h = sasrec_hidden(params, batch["hist"], batch["hist_mask"], cfg)
+    e_pos = jnp.take(params["item_table"], batch["pos"], axis=0)
+    e_neg = jnp.take(params["item_table"], batch["neg"], axis=0)
+    s_pos = jnp.sum(h * e_pos, -1)
+    s_neg = jnp.sum(h * e_neg, -1)
+    m = batch["hist_mask"]
+    loss = -(jnp.log(jax.nn.sigmoid(s_pos) + 1e-9)
+             + jnp.log(1 - jax.nn.sigmoid(s_neg) + 1e-9)) * m
+    return loss.sum() / jnp.maximum(m.sum(), 1.0), {}
+
+
+def sasrec_score(params, batch, cfg: RecsysConfig):
+    h = sasrec_hidden(params, batch["hist"], batch["hist_mask"], cfg)
+    e_t = jnp.take(params["item_table"], batch["target_item"], axis=0)
+    return jnp.sum(h[:, -1] * e_t, -1)
+
+
+def sasrec_retrieval(params, batch, cfg: RecsysConfig):
+    h = sasrec_hidden(params, batch["hist"][None], batch["hist_mask"][None],
+                      cfg)[0, -1]                      # (d,)
+    e_c = jnp.take(params["item_table"], batch["cand_items"], axis=0)
+    return e_c @ h                                     # (C,)
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec — bidirectional masked item prediction (arXiv:1904.06690)
+# ---------------------------------------------------------------------------
+
+def init_bert4rec(rng, cfg: RecsysConfig):
+    k = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    return {
+        "item_table": _init_table(k[0], cfg.n_items + 2, d),  # +pad +[MASK]
+        "pos_embed": _init_pos(k[1], cfg.seq_len, d),
+        "blocks": _init_blocks(k[2], cfg.n_blocks, d, cfg.n_heads, 4 * d),
+    }
+
+
+def bert4rec_hidden(params, hist, mask, cfg: RecsysConfig):
+    x = jnp.take(params["item_table"], hist, axis=0) + params["pos_embed"][None]
+    x = x * mask[..., None]
+    return _attn_blocks(params["blocks"], x, cfg.n_heads, causal=False)
+
+
+def bert4rec_loss(params, batch, cfg: RecsysConfig):
+    """Cloze objective over sampled candidates (1 true + n_neg) at masked
+    positions — full-vocab softmax at n_items=2**20 × B=65536 is deliberately
+    avoided (sampled softmax, standard at this scale)."""
+    h = bert4rec_hidden(params, batch["hist"], batch["hist_mask"], cfg)
+    mpos = batch["mask_pos"]                       # (B, M) positions
+    hm = jnp.take_along_axis(h, mpos[..., None], axis=1)        # (B, M, d)
+    cands = batch["cands"]                         # (B, M, 1+n_neg), [,:,0]=true
+    e_c = jnp.take(params["item_table"], cands, axis=0)         # (B,M,C,d)
+    logits = jnp.einsum("bmd,bmcd->bmc", hm, e_c)
+    logp = jax.nn.log_softmax(logits, -1)
+    m = batch["mask_valid"].astype(jnp.float32)    # (B, M)
+    return -(logp[..., 0] * m).sum() / jnp.maximum(m.sum(), 1.0), {}
+
+
+def bert4rec_score(params, batch, cfg: RecsysConfig):
+    h = bert4rec_hidden(params, batch["hist"], batch["hist_mask"], cfg)
+    e_t = jnp.take(params["item_table"], batch["target_item"], axis=0)
+    return jnp.sum(h[:, -1] * e_t, -1)
+
+
+def bert4rec_retrieval(params, batch, cfg: RecsysConfig):
+    h = bert4rec_hidden(params, batch["hist"][None],
+                        batch["hist_mask"][None], cfg)[0, -1]
+    e_c = jnp.take(params["item_table"], batch["cand_items"], axis=0)
+    return e_c @ h
+
+
+# ---------------------------------------------------------------------------
+# MIND — multi-interest capsule routing (arXiv:1904.08030)
+# ---------------------------------------------------------------------------
+
+def init_mind(rng, cfg: RecsysConfig):
+    k = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    return {
+        "item_table": _init_table(k[0], cfg.n_items, d),
+        "w_caps": jax.random.normal(k[1], (d, d)) / np.sqrt(d),
+        "route_init": jax.random.normal(k[2],
+                                        (cfg.seq_len, cfg.n_interests)) * 0.1,
+    }
+
+
+def _squash(s):
+    n2 = jnp.sum(s * s, -1, keepdims=True)
+    return (n2 / (1 + n2)) * s / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params, hist, mask, cfg: RecsysConfig):
+    """Dynamic B2I routing (fixed shared init logits, 3 iterations)."""
+    e = jnp.take(params["item_table"], hist, axis=0)     # (B,L,d)
+    eh = e @ params["w_caps"]                            # (B,L,d)
+    B, Lh, d = eh.shape
+    b = jnp.broadcast_to(params["route_init"][None], (B, Lh, cfg.n_interests))
+    neg = -1e9 * (1.0 - mask)[..., None]
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        c = jax.nn.softmax(b + neg, axis=1)              # over history
+        s = jnp.einsum("blk,bld->bkd", c, eh)
+        caps = _squash(s)                                # (B,K,d)
+        b = b + jnp.einsum("bkd,bld->blk", caps, eh)
+    return caps
+
+
+def mind_loss(params, batch, cfg: RecsysConfig):
+    """Sampled softmax with label-aware max-interest scoring."""
+    caps = mind_interests(params, batch["hist"], batch["hist_mask"], cfg)
+    cands = batch["cands"]                               # (B, 1+n_neg)
+    e_c = jnp.take(params["item_table"], cands, axis=0)  # (B,C,d)
+    scores = jnp.einsum("bkd,bcd->bkc", caps, e_c).max(axis=1)
+    logp = jax.nn.log_softmax(scores, -1)
+    return -logp[:, 0].mean(), {}
+
+
+def mind_score(params, batch, cfg: RecsysConfig):
+    caps = mind_interests(params, batch["hist"], batch["hist_mask"], cfg)
+    e_t = jnp.take(params["item_table"], batch["target_item"], axis=0)
+    return jnp.einsum("bkd,bd->bk", caps, e_t).max(-1)
+
+
+def mind_retrieval(params, batch, cfg: RecsysConfig):
+    caps = mind_interests(params, batch["hist"][None],
+                          batch["hist_mask"][None], cfg)[0]   # (K,d)
+    e_c = jnp.take(params["item_table"], batch["cand_items"], axis=0)
+    return (e_c @ caps.T).max(-1)                             # (C,)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+INIT = {"din": init_din, "sasrec": init_sasrec, "bert4rec": init_bert4rec,
+        "mind": init_mind}
+LOSS = {"din": din_loss, "sasrec": sasrec_loss, "bert4rec": bert4rec_loss,
+        "mind": mind_loss}
+SCORE = {"din": din_score, "sasrec": sasrec_score, "bert4rec": bert4rec_score,
+         "mind": mind_score}
+RETRIEVAL = {"din": din_retrieval, "sasrec": sasrec_retrieval,
+             "bert4rec": bert4rec_retrieval, "mind": mind_retrieval}

@@ -1,0 +1,369 @@
+"""Config-driven decoder-only transformer (dense or MoE) with GQA, RoPE,
+GeGLU/SwiGLU, RMSNorm; scan-over-layers; train / prefill / decode entry
+points.  Covers gemma-7b, phi3-medium-14b, internlm2-1.8b,
+granite-moe-1b-a400m and kimi-k2-1t-a32b via LMConfig.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.distributed.sharding import shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 → d_model // n_heads
+    act: str = "swiglu"               # 'swiglu' | 'geglu'
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    embed_scale: bool = False         # gemma multiplies embeddings by sqrt(d)
+    # MoE
+    n_experts: int = 0                # 0 → dense FFN
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # numerics / memory
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "dots"               # 'none' | 'dots' | 'full'
+    attn_chunk: int = 1024            # KV chunk for online-softmax attention
+    unroll_scan: bool = False         # dry-run cost probes: unroll all scans
+    attn_scores_dtype: str = "float32"  # 'bfloat16' = Perf iteration 7
+    full_attn_max_seq: int = 8192     # above this, use chunked attention
+    sharding_preset: str = "tp"       # 'tp' | 'fsdp'
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        hd = self.hd
+        attn = self.d_model * hd * (self.n_heads + 2 * self.n_kv) \
+            + self.n_heads * hd * self.d_model
+        if self.is_moe:
+            ffn = self.n_experts * 3 * self.d_model * self.d_ff \
+                + self.d_model * self.n_experts
+        else:
+            ffn = 3 * self.d_model * self.d_ff
+        embed = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn + 2 * self.d_model) + embed
+
+    def active_param_count(self) -> int:
+        """Activated params (MoE: top_k experts only) for 6·N·D accounting."""
+        if not self.is_moe:
+            return self.param_count()
+        hd = self.hd
+        attn = self.d_model * hd * (self.n_heads + 2 * self.n_kv) \
+            + self.n_heads * hd * self.d_model
+        ffn = self.top_k * 3 * self.d_model * self.d_ff \
+            + self.d_model * self.n_experts
+        embed = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn + 2 * self.d_model) + embed
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: LMConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    hd = cfg.hd
+    k = iter(jax.random.split(rng, 16))
+    s = 1.0 / np.sqrt(cfg.d_model)
+
+    def mk(key, shape, scale):
+        return (jax.random.normal(key, shape) * scale).astype(pdt)
+
+    layer = {
+        "ln1": jnp.zeros((cfg.n_layers, cfg.d_model), pdt),
+        "ln2": jnp.zeros((cfg.n_layers, cfg.d_model), pdt),
+        "attn": {
+            "wq": mk(next(k), (cfg.n_layers, cfg.d_model, cfg.n_heads * hd), s),
+            "wk": mk(next(k), (cfg.n_layers, cfg.d_model, cfg.n_kv * hd), s),
+            "wv": mk(next(k), (cfg.n_layers, cfg.d_model, cfg.n_kv * hd), s),
+            "wo": mk(next(k), (cfg.n_layers, cfg.n_heads * hd, cfg.d_model),
+                     1.0 / np.sqrt(cfg.n_heads * hd)),
+        },
+    }
+    if cfg.is_moe:
+        layer["moe"] = {
+            "router": mk(next(k), (cfg.n_layers, cfg.d_model, cfg.n_experts),
+                         s).astype(jnp.float32),
+            "w_in": mk(next(k), (cfg.n_layers, cfg.n_experts, cfg.d_model,
+                                 cfg.d_ff), s),
+            "w_gate": mk(next(k), (cfg.n_layers, cfg.n_experts, cfg.d_model,
+                                   cfg.d_ff), s),
+            "w_out": mk(next(k), (cfg.n_layers, cfg.n_experts, cfg.d_ff,
+                                  cfg.d_model), 1.0 / np.sqrt(cfg.d_ff)),
+        }
+    else:
+        layer["mlp"] = {
+            "w_in": mk(next(k), (cfg.n_layers, cfg.d_model, cfg.d_ff), s),
+            "w_gate": mk(next(k), (cfg.n_layers, cfg.d_model, cfg.d_ff), s),
+            "w_out": mk(next(k), (cfg.n_layers, cfg.d_ff, cfg.d_model),
+                        1.0 / np.sqrt(cfg.d_ff)),
+        }
+    params = {
+        "embed": mk(next(k), (cfg.vocab, cfg.d_model), 1.0),
+        "final_norm": jnp.zeros((cfg.d_model,), pdt),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = mk(next(k), (cfg.vocab, cfg.d_model), s)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: LMConfig, lp, x, cos, sin):
+    """One decoder layer on (B, S, D). Returns (x, aux)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.hd
+    B, S, _ = x.shape
+
+    h = L.rms_norm(x, lp["ln1"].astype(jnp.float32))
+    q = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wq"].astype(cdt))
+    kk = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wk"].astype(cdt))
+    vv = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wv"].astype(cdt))
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    kk = kk.reshape(B, S, cfg.n_kv, hd)
+    vv = vv.reshape(B, S, cfg.n_kv, hd)
+    q = L.apply_rope(q, cos, sin)
+    kk = L.apply_rope(kk, cos, sin)
+    q = shard_hint(q, "act_qkv")
+    # explicit SP→replicated all-gather for KV: without this XLA falls into
+    # an "involuntary full rematerialization" reshard (EXPERIMENTS §Perf i5)
+    kk = shard_hint(kk, "act_kv")
+    vv = shard_hint(vv, "act_kv")
+    if S > cfg.full_attn_max_seq:
+        attn = L.attention_chunked(q, kk, vv, chunk=cfg.attn_chunk,
+                                       unroll=cfg.unroll_scan)
+    else:
+        attn = L.attention_full(
+            q, kk, vv, scores_dtype=jnp.dtype(cfg.attn_scores_dtype))
+    attn = attn.reshape(B, S, cfg.n_heads * hd)
+    proj = jnp.einsum("bsh,hd->bsd", attn, lp["attn"]["wo"].astype(cdt))
+    x = x + shard_hint(proj, "act_resid")   # reduce-scatter at the producer
+
+    h = L.rms_norm(x, lp["ln2"].astype(jnp.float32))
+    if cfg.is_moe:
+        out, aux = moe_lib.moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   act=cfg.act)
+    else:
+        out = L.glu_mlp(h, lp["mlp"]["w_in"], lp["mlp"]["w_gate"],
+                        lp["mlp"]["w_out"], cfg.act)
+        aux = jnp.float32(0.0)
+    x = x + shard_hint(out, "act_resid")
+    x = shard_hint(x, "act_resid")
+    return x, aux
+
+
+def forward(params, tokens, cfg: LMConfig, return_hidden: bool = False):
+    """tokens: (B, S) int32 → logits (B, S, V) in f32, aux loss."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.embed_scale:
+        # keep compute dtype: a bare f32 scalar multiply silently promotes
+        # the entire residual stream to f32 (caught via dtype-promotion
+        # warning in the gemma smoke test)
+        x = (x * np.sqrt(cfg.d_model)).astype(cdt)
+    B, S, _ = x.shape
+    cos, sin = L.rope_angles(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    cos = jnp.broadcast_to(cos[None], (B,) + cos.shape)
+    sin = jnp.broadcast_to(sin[None], (B,) + sin.shape)
+
+    def body(x, lp):
+        x, aux = _layer_fwd(cfg, lp, x, cos, sin)
+        return x, aux
+
+    if cfg.remat != "none":
+        # 'dots' saves weight matmuls but NOT batched (attention-score) dots —
+        # saving (B,H,S,S) scores across a 24-layer scan is ~25 GB/chip at 4k
+        # (measured in the dry-run; see EXPERIMENTS §Perf iteration log).
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "full"
+                  else jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        body = jax.checkpoint(body, policy=policy)
+    x, auxs = lax.scan(body, x, params["layers"],
+                   unroll=cfg.n_layers if cfg.unroll_scan else 1)
+    x = L.rms_norm(x, params["final_norm"].astype(jnp.float32))
+    if return_hidden:
+        return x, jnp.sum(auxs)
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    return logits, jnp.sum(auxs)
+
+
+def lm_hidden(params, tokens, cfg: LMConfig):
+    """forward() without the vocab projection; returns (x_final, aux)."""
+    return forward(params, tokens, cfg, return_hidden=True)
+
+
+def lm_loss(params, batch, cfg: LMConfig, aux_weight: float = 0.01):
+    x, aux = lm_hidden(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    head = params.get("lm_head", params["embed"])
+
+    # Loss head (EXPERIMENTS §Perf iteration 6): the naive head materializes
+    # ~5 (B,S,V) f32 buffers (logits, log-softmax, take_along_axis backward
+    # scatter, layout copy).  Instead: bf16 logits feeding a fused f32
+    # logsumexp, the picked logit via a gather-dot (row-gather of the head
+    # by label, then an elementwise dot — no (B,S,V) backward exists), and
+    # the whole head rematerialized in the backward pass.
+    def head_loss(x, head):
+        logits = jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype))
+        logits = shard_hint(logits, "logits")      # V over 'model'
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        # picked logit via take_along_axis on the *vocab-sharded* logits: its
+        # backward is a (B,S,V)-sharded scatter.  (Iteration i6 used a
+        # gather-dot on head rows instead; i10 measured its backward as a
+        # *replicated* (V,D) f32 scatter + all-reduce — ~13 GB per 2-layer
+        # probe at gemma's 256k vocab.  EXPERIMENTS §Perf i10.)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        nll = lse - picked.astype(jnp.float32)
+        mask = (labels >= 0).astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+
+    loss = jax.checkpoint(head_loss)(x, head)
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt)}
+
+
+def prefill(params, tokens, cfg: LMConfig):
+    """Full-sequence forward that also returns the KV cache.
+
+    tokens: (B, S). Returns (last-token logits (B, V), cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.embed_scale:
+        # keep compute dtype: a bare f32 scalar multiply silently promotes
+        # the entire residual stream to f32 (caught via dtype-promotion
+        # warning in the gemma smoke test)
+        x = (x * np.sqrt(cfg.d_model)).astype(cdt)
+    B, S, _ = x.shape
+    cos, sin = L.rope_angles(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    cos = jnp.broadcast_to(cos[None], (B,) + cos.shape)
+    sin = jnp.broadcast_to(sin[None], (B,) + sin.shape)
+    hd = cfg.hd
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"].astype(jnp.float32))
+        q = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wq"].astype(cdt))
+        kk = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wk"].astype(cdt))
+        vv = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wv"].astype(cdt))
+        q = L.apply_rope(q.reshape(B, S, cfg.n_heads, hd), cos, sin)
+        kk = L.apply_rope(kk.reshape(B, S, cfg.n_kv, hd), cos, sin)
+        vv = vv.reshape(B, S, cfg.n_kv, hd)
+        kk = shard_hint(kk, "kv_cache")
+        vv = shard_hint(vv, "kv_cache")
+        if S > cfg.full_attn_max_seq:
+            attn = L.attention_chunked(q, kk, vv, chunk=cfg.attn_chunk,
+                                       unroll=cfg.unroll_scan)
+        else:
+            attn = L.attention_full(q, kk, vv)
+        attn = attn.reshape(B, S, cfg.n_heads * hd)
+        x = x + jnp.einsum("bsh,hd->bsd", attn, lp["attn"]["wo"].astype(cdt))
+        h = L.rms_norm(x, lp["ln2"].astype(jnp.float32))
+        if cfg.is_moe:
+            out, _ = moe_lib.moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     act=cfg.act)
+        else:
+            out = L.glu_mlp(h, lp["mlp"]["w_in"], lp["mlp"]["w_gate"],
+                            lp["mlp"]["w_out"], cfg.act)
+        x = x + out
+        x = shard_hint(x, "act_resid")
+        return x, (kk, vv)
+
+    x, (ks, vs) = lax.scan(body, x, params["layers"],
+                       unroll=cfg.n_layers if cfg.unroll_scan else 1)
+    x = L.rms_norm(x, params["final_norm"].astype(jnp.float32))
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(params, cache, token, pos, cfg: LMConfig):
+    """One decode step. token: (B,) int32; pos: scalar int32 (current length).
+
+    cache k/v: (L, B, S_max, Hkv, hd). Returns (logits (B, V), new cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    hd = cfg.hd
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cdt)
+    if cfg.embed_scale:
+        # keep compute dtype: a bare f32 scalar multiply silently promotes
+        # the entire residual stream to f32 (caught via dtype-promotion
+        # warning in the gemma smoke test)
+        x = (x * np.sqrt(cfg.d_model)).astype(cdt)
+    cos, sin = L.rope_angles(pos[None], cfg.hd, cfg.rope_theta)
+    cos = jnp.broadcast_to(cos[None], (B, 1, hd // 2))
+    sin = jnp.broadcast_to(sin[None], (B, 1, hd // 2))
+
+    def body(x, layer_in):
+        lp, kc, vc = layer_in
+        h = L.rms_norm(x, lp["ln1"].astype(jnp.float32))
+        q = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wq"].astype(cdt))
+        kk = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wk"].astype(cdt))
+        vv = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wv"].astype(cdt))
+        q = L.apply_rope(q.reshape(B, 1, cfg.n_heads, hd), cos, sin)
+        kk = L.apply_rope(kk.reshape(B, 1, cfg.n_kv, hd), cos, sin)
+        vv = vv.reshape(B, 1, cfg.n_kv, hd)
+        kc = lax.dynamic_update_slice(kc, kk.astype(kc.dtype), (0, pos, 0, 0))
+        vc = lax.dynamic_update_slice(vc, vv.astype(vc.dtype), (0, pos, 0, 0))
+        attn = L.attention_decode(q, kc, vc, pos + 1)
+        attn = attn.reshape(B, 1, cfg.n_heads * hd)
+        x = x + jnp.einsum("bsh,hd->bsd", attn, lp["attn"]["wo"].astype(cdt))
+        h = L.rms_norm(x, lp["ln2"].astype(jnp.float32))
+        if cfg.is_moe:
+            out, _ = moe_lib.moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     act=cfg.act)
+        else:
+            out = L.glu_mlp(h, lp["mlp"]["w_in"], lp["mlp"]["w_gate"],
+                            lp["mlp"]["w_out"], cfg.act)
+        x = x + out
+        return x, (kc, vc)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                       unroll=cfg.n_layers if cfg.unroll_scan else 1)
+    x = L.rms_norm(x, params["final_norm"].astype(jnp.float32))
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,75 @@
+"""AdamW with global-norm clipping — pure pytree ops, sharding-transparent
+(optimizer state inherits/extends parameter shardings under pjit)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"   # bf16 for ~1T-param models (DESIGN §4)
+
+
+def init(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        upd = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+        if p.ndim >= 2:                      # no decay on norms/biases
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * upd
+        return (newp.astype(p.dtype), mu32.astype(mu.dtype),
+                nu32.astype(nu.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    flat, treedef = jax.tree_util.tree_flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = jax.tree_util.tree_unflatten(treedef, [x[0] for x in flat])
+    mu = jax.tree_util.tree_unflatten(treedef, [x[1] for x in flat])
+    nu = jax.tree_util.tree_unflatten(treedef, [x[2] for x in flat])
+    return newp, {"mu": mu, "nu": nu, "step": step}, {"grad_norm": gnorm}
+
+
+def cosine_schedule(step, base_lr=1.0, warmup: int = 100,
+                    total: int = 10000, min_frac: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = t / jnp.maximum(warmup, 1)
+    prog = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(t < warmup, warm, cos)

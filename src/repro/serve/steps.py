@@ -1,0 +1,55 @@
+"""Serve-step factories: LM prefill / decode, recsys scoring / retrieval.
+These are what decode_* / long_* / serve_* / retrieval_* dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import recsys as recsys_lib
+from repro.models.transformer import LMConfig, prefill, decode_step
+
+
+def make_prefill_step(cfg: LMConfig):
+    def step(params, tokens):
+        return prefill(params, tokens, cfg)
+    return step
+
+
+def make_decode_step(cfg: LMConfig):
+    """One new token against an existing KV cache (decode_32k / long_500k)."""
+    def step(params, cache, token, pos):
+        return decode_step(params, cache, token, pos, cfg)
+    return step
+
+
+def make_recsys_score_step(cfg: recsys_lib.RecsysConfig):
+    score = recsys_lib.SCORE[cfg.arch]
+    def step(params, batch):
+        return score(params, batch, cfg)
+    return step
+
+
+def make_recsys_retrieval_step(cfg: recsys_lib.RecsysConfig, top_k: int = 100):
+    retr = recsys_lib.RETRIEVAL[cfg.arch]
+    def step(params, batch):
+        scores = retr(params, batch, cfg)
+        return jax.lax.top_k(scores, top_k)
+    return step
+
+
+def greedy_generate(params, cfg: LMConfig, prompt, max_new: int, cache_len):
+    """Host loop driving prefill + decode_step (examples/serving demo)."""
+    from repro.models.transformer import init_kv_cache
+    B, S = prompt.shape
+    logits, pre_cache = prefill(params, prompt, cfg)
+    cache = init_kv_cache(cfg, B, cache_len)
+    cache = {k: cache[k].at[:, :, :S].set(v) for k, v in
+             (("k", pre_cache["k"]), ("v", pre_cache["v"]))}
+    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    for i in range(max_new - 1):
+        logits, cache = decode_step(params, cache, out[-1],
+                                    jnp.int32(S + i), cfg)
+        out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,89 @@
+"""Train-step factories — the functions the launcher jits/pjits and the
+dry-run lowers.  Pure (params, opt_state, batch[, rng]) → (params, opt_state,
+metrics); sharding is supplied externally via in_shardings/out_shardings.
+Optional microbatch gradient accumulation via lax.scan (one optimizer update,
+one gradient all-reduce per step — the standard comm-minimizing layout).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as recsys_lib
+from repro.models.transformer import LMConfig, lm_loss
+from repro.optim import adamw
+
+
+def _make_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
+               total_steps: int = 10000, warmup: int = 100,
+               accum: int = 1, has_rng: bool = False):
+    def grads_of(params, batch, rng):
+        if has_rng:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, rng)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, rng):
+        if accum == 1:
+            loss, metrics, grads = grads_of(params, batch, rng)
+        else:
+            # batch leaves have a leading (accum,) microbatch dim
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, _, grads = grads_of(params, mb, rng)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = lax.scan(body, (zeros, jnp.float32(0)), batch)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        lr_scale = adamw.cosine_schedule(opt_state["step"], 1.0, warmup,
+                                         total_steps)
+        params, opt_state, om = adamw.update(grads, opt_state, params,
+                                             opt_cfg, lr_scale)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# per-family factories
+# ---------------------------------------------------------------------------
+
+def make_lm_train_step(cfg: LMConfig, opt_cfg=None, accum: int = 1, **kw):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    return _make_step(lambda p, b: lm_loss(p, b, cfg), opt_cfg,
+                      accum=accum, **kw)
+
+
+def make_gnn_train_step(cfg: gnn_lib.GNNConfig, variant: str,
+                        opt_cfg=None, fanout=(15, 10), **kw):
+    opt_cfg = opt_cfg or adamw.AdamWConfig(weight_decay=0.0)
+    if variant == "full":
+        return _make_step(lambda p, b: gnn_lib.node_loss(p, b, cfg),
+                          opt_cfg, **kw)
+    if variant == "minibatch":
+        return _make_step(
+            lambda p, b, r: gnn_lib.minibatch_loss(p, b, r, cfg, fanout),
+            opt_cfg, has_rng=True, **kw)
+    if variant == "molecule":
+        return _make_step(lambda p, b: gnn_lib.molecule_loss(p, b, cfg),
+                          opt_cfg, **kw)
+    raise ValueError(variant)
+
+
+def make_recsys_train_step(cfg: recsys_lib.RecsysConfig, opt_cfg=None, **kw):
+    opt_cfg = opt_cfg or adamw.AdamWConfig(weight_decay=0.0)
+    loss_fn = recsys_lib.LOSS[cfg.arch]
+    return _make_step(lambda p, b: loss_fn(p, b, cfg), opt_cfg, **kw)

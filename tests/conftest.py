@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)
+
+
+def sorted_unique(rng, n, universe_bits=26):
+    u = 1 << universe_bits
+    return np.sort(rng.choice(u, size=min(n, u // 2), replace=False)).astype(
+        np.int64)

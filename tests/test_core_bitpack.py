@@ -1,0 +1,96 @@
+"""Codec round-trip + compression-ratio invariants (paper §3–4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack, codecs, varint, fastpfor
+from repro.core.deltas import MODES, prefix_sum_ops_per_int
+
+ALL_MODES = [m for m in MODES if m != "none"]
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("n", [0, 1, 127, 4096, 4097, 12800])
+def test_roundtrip_sizes(mode, n, rng):
+    gaps = rng.integers(1, 100, size=n)
+    x = np.cumsum(gaps)
+    pl = bitpack.encode(x, mode=mode)
+    assert np.array_equal(bitpack.decode_np(pl), x)
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_roundtrip_wide_values(mode, rng):
+    x = np.sort(rng.choice(2**31 - 2, size=8192, replace=False))
+    pl = bitpack.encode(x, mode=mode)
+    assert np.array_equal(bitpack.decode_np(pl), x)
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_roundtrip_block_rows_8(mode, rng):
+    x = np.cumsum(rng.integers(1, 9, size=3000))
+    pl = bitpack.encode(x, mode=mode, block_rows=8)
+    assert np.array_equal(bitpack.decode_np(pl), x)
+
+
+def test_ni_equals_integrated(rng):
+    x = np.cumsum(rng.integers(1, 1000, size=9000))
+    pl = bitpack.encode(x, mode="d2")
+    a = np.asarray(bitpack.decode(pl))
+    b = np.asarray(bitpack.decode_ni(pl))
+    assert np.array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_property_roundtrip_all_codecs(data):
+    """Any strictly increasing uint31 list round-trips through any codec."""
+    r = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    n = data.draw(st.integers(1, 6000))
+    mode = data.draw(st.sampled_from(ALL_MODES))
+    fam = data.draw(st.sampled_from(["bp", "fastpfor", "varint"]))
+    heavy_tail = data.draw(st.booleans())
+    if heavy_tail:
+        gaps = np.where(r.random(n) < 0.05,
+                        r.integers(1, 1 << 20, n), r.integers(1, 8, n))
+    else:
+        gaps = r.integers(1, 64, n)
+    x = np.cumsum(gaps)
+    name = "varint" if fam == "varint" else f"{fam}-{mode}"
+    c = codecs.get_codec(name)
+    enc = c.encode(x)
+    assert np.array_equal(c.decode_np(enc), x)
+
+
+def test_compression_ordering_dense(rng):
+    """Paper Table 3 structure: d1 ≤ d2 ≤ d4 ≤ dm ≈ dv on small-gap data."""
+    x = np.cumsum(rng.integers(1, 8, size=65536))
+    bits = {m: bitpack.bits_per_int(bitpack.encode(x, mode=m))
+            for m in ["d1", "d2", "d4", "dm", "dv"]}
+    assert bits["d1"] <= bits["d2"] <= bits["d4"] <= bits["dm"] + 1e-9
+    assert bits["dm"] <= bits["dv"] + 1e-9
+
+
+def test_fastpfor_beats_bp_on_outliers(rng):
+    """Patching wins exactly where the paper says it does."""
+    gaps = np.where(rng.random(65536) < 0.01,
+                    rng.integers(1, 100000, 65536), rng.integers(1, 4, 65536))
+    x = np.cumsum(gaps)
+    bp_bits = bitpack.bits_per_int(bitpack.encode(x, mode="d1"))
+    pf = fastpfor.encode(x, mode="d1")
+    assert np.array_equal(fastpfor.decode_np(pf), x)
+    assert fastpfor.bits_per_int(pf) < bp_bits * 0.6
+
+
+def test_varint_small_gaps_one_byte(rng):
+    x = np.cumsum(rng.integers(1, 100, size=10000))       # gaps < 2**7
+    vl = varint.encode(x)
+    assert abs(varint.bits_per_int(vl) - 8.0) < 0.2
+    assert np.array_equal(varint.decode(vl), x)
+
+
+def test_prefix_sum_cost_model_monotone():
+    """Table 1 analogue: wider stride → fewer ops/int."""
+    costs = [prefix_sum_ops_per_int(m) for m in ["d1", "d2", "d4", "dm", "dv"]]
+    assert costs == sorted(costs, reverse=True)
+    assert costs[-1] < 0.01           # dv ≈ free at lane width 128

@@ -1,0 +1,91 @@
+"""Intersection algorithms vs the scalar oracle (paper §5)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitmap, bitpack
+from repro.core import intersect as its
+
+
+def _pair(rng, m, n, overlap=0.34):
+    inter = np.sort(rng.choice(2**26, size=max(int(m * overlap), 1),
+                               replace=False))
+    r = np.union1d(inter, rng.choice(2**26, size=m, replace=False))
+    f = np.union1d(inter, rng.choice(2**26, size=n, replace=False))
+    return r.astype(np.int64), f.astype(np.int64)
+
+
+def _run(fn, r, f):
+    M = its.pow2_bucket(len(r))
+    N = its.pow2_bucket(len(f), floor=1024)
+    rp, fp = jnp.asarray(its.pad_to(r, M)), jnp.asarray(its.pad_to(f, N))
+    mask = fn(rp, fp)
+    vals, cnt = its.compact(rp, mask)
+    return np.asarray(vals)[: int(cnt)]
+
+
+@pytest.mark.parametrize("m,n", [(10, 10), (128, 128), (100, 3000),
+                                 (1000, 64000), (7, 200000)])
+def test_gallop_and_tiled_match_oracle(m, n, rng):
+    r, f = _pair(rng, m, n)
+    expect = its.intersect_ref(r, f)
+    assert np.array_equal(_run(its.intersect_gallop, r, f), expect)
+    assert np.array_equal(_run(its.intersect_tiled, r, f), expect)
+
+
+def test_auto_dispatch(rng):
+    r, f = _pair(rng, 100, 100000)
+    expect = its.intersect_ref(r, f)
+    M, N = its.pow2_bucket(len(r)), its.pow2_bucket(len(f), floor=1024)
+    rp, fp = jnp.asarray(its.pad_to(r, M)), jnp.asarray(its.pad_to(f, N))
+    mask = its.intersect_auto(rp, fp, len(r), len(f))
+    vals, cnt = its.compact(rp, mask)
+    assert np.array_equal(np.asarray(vals)[: int(cnt)], expect)
+
+
+def test_packed_gallop_block_skip(rng):
+    """Galloping over a *compressed* list via the block-max skip index."""
+    r, f = _pair(rng, 300, 500000)
+    expect = its.intersect_ref(r, f)
+    for mode in ["d1", "dv"]:
+        pf = bitpack.encode(f, mode=mode)
+        rp = jnp.asarray(its.pad_to(r, its.pow2_bucket(len(r))))
+        mask = its.intersect_packed(rp, pf)
+        vals, cnt = its.compact(rp, mask)
+        assert np.array_equal(np.asarray(vals)[: int(cnt)], expect)
+
+
+def test_disjoint_and_identical(rng):
+    a = np.arange(0, 20000, 2, dtype=np.int64)
+    b = np.arange(1, 20001, 2, dtype=np.int64)
+    assert len(_run(its.intersect_gallop, a, b)) == 0
+    assert np.array_equal(_run(its.intersect_gallop, a, a), a)
+    assert np.array_equal(_run(its.intersect_tiled, a, a), a)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 3000), st.integers(1, 30000))
+def test_property_intersection(seed, m, n):
+    rng = np.random.default_rng(seed)
+    r, f = _pair(rng, m, n)
+    expect = np.intersect1d(r, f)
+    assert np.array_equal(_run(its.intersect_gallop, r, f), expect)
+    assert np.array_equal(_run(its.intersect_tiled, r, f), expect)
+
+
+def test_bitmap_ops(rng):
+    r, f = _pair(rng, 400, 30000)
+    bm = bitmap.build_np(f, 2**26)
+    assert int(bitmap.popcount(jnp.asarray(bm))) == len(f)
+    assert np.array_equal(bitmap.extract_np(bm), f.astype(np.int32))
+    rp = jnp.asarray(its.pad_to(r, its.pow2_bucket(len(r))))
+    mask = bitmap.to_mask_over(rp, jnp.asarray(bm))
+    vals, cnt = its.compact(rp, mask)
+    assert np.array_equal(np.asarray(vals)[: int(cnt)],
+                          its.intersect_ref(r, f))
+    # bitmap ∧ bitmap count
+    bm_r = bitmap.build_np(r, 2**26)
+    assert int(bitmap.intersect_count(jnp.asarray(bm), jnp.asarray(bm_r))) \
+        == len(its.intersect_ref(r, f))

@@ -1,0 +1,76 @@
+"""Data substrate: ClusterData properties, compressed CSR, sampler validity,
+compressed shuffle-index and history stores (the paper's codec applied to the
+framework substrate)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.data import graph_data, lm_data, recsys_data
+from repro.data.clusterdata import clusterdata, delta_entropy, paired_lists
+from repro.models.gnn import sample_neighbors
+
+
+def test_clusterdata_properties(rng):
+    for bits in (19, 26, 30):
+        x = clusterdata(rng, 65536, bits)
+        assert np.all(np.diff(x) > 0)
+        assert x[0] >= 0 and x[-1] < (1 << bits)
+    # dense lists have lower delta entropy than sparse (paper Table 3)
+    h_dense = delta_entropy(clusterdata(rng, 65536, 19))
+    h_sparse = delta_entropy(clusterdata(rng, 65536, 30))
+    assert h_dense < h_sparse
+
+
+def test_paired_lists_overlap(rng):
+    r, f = paired_lists(rng, 3000, 100000)
+    inter = np.intersect1d(r, f)
+    assert len(inter) >= 3000 // 3 - 1
+
+
+def test_compressed_csr_roundtrip(rng):
+    g = graph_data.synthetic_graph(5000, 12, seed=1)
+    cc = graph_data.CompressedCSR.compress(g["indptr"], g["indices"], 5000)
+    assert np.array_equal(cc.decompress(), g["indices"])
+    assert cc.bits_per_edge() < 32
+
+
+def test_sampler_validity(rng):
+    g = graph_data.synthetic_graph(3000, 10, seed=2)
+    indptr = jnp.asarray(g["indptr"])
+    indices = jnp.asarray(g["indices"])
+    seeds = jnp.asarray(rng.integers(0, 3000, size=256).astype(np.int32))
+    nbrs = np.asarray(sample_neighbors(jax.random.PRNGKey(0), indptr,
+                                       indices, seeds, 7))
+    assert nbrs.shape == (256, 7)
+    ip, ix = g["indptr"], g["indices"]
+    for i, s in enumerate(np.asarray(seeds)):
+        deg = ip[s + 1] - ip[s]
+        valid = set(ix[ip[s]: ip[s + 1]]) if deg else {s}
+        assert set(nbrs[i]) <= valid
+
+
+def test_shuffle_index_compressed(rng):
+    order, packed = lm_data.make_shuffle_index(10000, epoch=3)
+    assert sorted(order.tolist()) == list(range(10000))
+    assert np.array_equal(bitpack.decode_np(packed), np.arange(10000))
+    assert bitpack.bits_per_int(packed) < 2.0     # deltas are ~1
+
+
+def test_history_store_compression(rng):
+    hists = [np.sort(rng.choice(1 << 20, size=rng.integers(10, 400),
+                                replace=False)) for _ in range(50)]
+    packed, bits = recsys_data.compress_histories(list(hists))
+    from repro.core import varint
+    for (kind, p), h in zip(packed, hists):
+        got = varint.decode(p) if kind == "varint" else bitpack.decode_np(p)
+        assert np.array_equal(got, np.unique(h))
+    assert bits < 32
+
+
+def test_token_stream_learnable():
+    ts = lm_data.TokenStream(vocab=64, seed=0)
+    b = ts.batch(8, 32)
+    assert b["tokens"].shape == (8, 32)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()

@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), swept over shapes,
+bit widths and delta modes — the per-kernel allclose requirement."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bitpack, deltas as deltas_lib
+from repro.core import intersect as its
+from repro.kernels import ops, ref
+from repro.kernels import bitunpack as kb
+
+
+MODES = ["none", "d1", "d2", "d4", "dm", "dv"]
+
+
+def _make_block_with_width(rng, b: int):
+    """One (32,128) block whose deltas need exactly width b."""
+    if b == 0:
+        d = np.zeros((1, 32, 128), np.uint32)
+    else:
+        d = rng.integers(0, 1 << b, size=(1, 32, 128)).astype(np.uint32)
+        d[0, 0, 0] = (1 << b) - 1            # force the max
+    return d
+
+
+@pytest.mark.parametrize("b", list(range(0, 33)))
+def test_unpack_kernel_all_widths(b, rng):
+    """Width sweep: pack on host, unpack via kernel vs jnp oracle."""
+    d = _make_block_with_width(rng, b)
+    packed = bitpack.pack_block_np(d[0], b)
+    padded = np.zeros((1, 32, 128), np.uint32)
+    padded[0, : packed.shape[0]] = packed
+    widths = jnp.asarray([b], jnp.int32)
+    seeds = jnp.asarray([0], jnp.uint32)
+    got = ops.unpack_blocks(jnp.asarray(padded), widths, seeds, mode="none")
+    want = ref.unpack_blocks_ref(jnp.asarray(padded), widths, seeds,
+                                 mode="none")
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(got), d)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_unpack_kernel_integrated_prefix(mode, rng):
+    """Integrated unpack+prefix-sum (Algorithm 1) vs library decode."""
+    x = np.cumsum(rng.integers(1, 2000, size=5 * 4096 + 123))
+    pl = bitpack.encode(x, mode=mode)
+    got = np.asarray(ops.decode_packed(pl))[: pl.n]
+    assert np.array_equal(got, x)
+    got_ni = np.asarray(ops.decode_packed_ni(pl))[: pl.n]
+    assert np.array_equal(got_ni, x)
+
+
+@pytest.mark.parametrize("mode", ["d1", "d4", "dm", "dv"])
+def test_pack_kernel_roundtrip(mode, rng):
+    x = np.cumsum(rng.integers(1, 300, size=4 * 4096)).astype(np.int64)
+    blocks = x.reshape(4, 32, 128)
+    maxes = blocks[:, -1, -1]
+    seeds_np = np.concatenate([[0], maxes[:-1]]).astype(np.int64)
+    d = deltas_lib.encode_deltas_np(blocks, seeds_np, mode)
+    widths = jnp.asarray(
+        [int(d[k].max()).bit_length() for k in range(4)], jnp.int32)
+    seeds = jnp.asarray(seeds_np.astype(np.uint32))
+    packed_k = ops.pack_blocks(jnp.asarray(blocks.astype(np.uint32)),
+                               seeds, widths, mode=mode)
+    packed_r = ref.pack_blocks_ref(jnp.asarray(d), widths)
+    assert np.array_equal(np.asarray(packed_k), np.asarray(packed_r))
+    vals = ops.unpack_blocks(packed_k, widths, seeds, mode=mode)
+    assert np.array_equal(np.asarray(vals), blocks.astype(np.uint32))
+
+
+@pytest.mark.parametrize("m,n", [(64, 1024), (500, 65536), (128, 1 << 18)])
+def test_intersect_kernel_sweep(m, n, rng):
+    inter = np.sort(rng.choice(2**25, size=m // 3, replace=False))
+    r = np.union1d(inter, rng.choice(2**25, size=m, replace=False))
+    f = np.union1d(inter, rng.choice(2**25, size=n, replace=False))
+    expect = its.intersect_ref(r, f)
+    mask_k = ops.intersect_gallop(jnp.asarray(r, jnp.int32),
+                                  jnp.asarray(f, jnp.int32))
+    rp = jnp.asarray(r, jnp.int32)
+    vals, cnt = its.compact(rp, mask_k)
+    assert np.array_equal(np.asarray(vals)[: int(cnt)], expect)
+    # oracle agreement
+    M = its.pow2_bucket(len(r))
+    N = its.pow2_bucket(len(f), floor=1024)
+    mask_o = ref.intersect_gallop_ref(jnp.asarray(its.pad_to(r, M)),
+                                      jnp.asarray(its.pad_to(f, N)))
+    assert np.array_equal(np.asarray(mask_k), np.asarray(mask_o)[: len(r)])
+
+
+def test_kernel_vmem_budget():
+    """BlockSpec working sets stay under TPU v5e VMEM (16 MiB)."""
+    unpack_ws = 2 * 32 * 128 * 4                   # in+out tiles
+    assert unpack_ws < 16 * 2**20
+    gallop_ws = ops.GALLOP_VMEM_CAP * 4 + 2 * kb.LANES * 4
+    assert gallop_ws <= 8 * 2**20                  # f table + r tile

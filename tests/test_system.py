@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the paper's system: build a synthetic
+corpus, compress it with every codec family, answer conjunctive queries, and
+check every result against a brute-force oracle (paper §6.7 pipeline)."""
+
+import numpy as np
+import pytest
+
+from repro.index import builder, corpus as corpus_lib, engine
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return corpus_lib.synthesize(n_docs=1 << 16, n_queries=10, seed=3)
+
+
+@pytest.mark.parametrize("codec", ["bp-d1", "bp-dv", "fastpfor-d1", "varint"])
+@pytest.mark.parametrize("B", [0, 16])
+def test_queries_match_bruteforce(corpus, codec, B):
+    idx = builder.build(corpus.postings, corpus.n_docs, codec_name=codec,
+                        B=B, n_parts=2)
+    for q in corpus.queries:
+        got = engine.query(idx, q)
+        expect = engine.brute_force(corpus.postings, q)
+        assert got.count == len(expect)
+        assert np.array_equal(np.sort(got.docs), expect[: len(got.docs)])
+
+
+def test_bitmap_threshold_controls_hybrid(corpus):
+    """HYB+M2: larger B → more bitmap terms."""
+    def n_bitmaps(B):
+        idx = builder.build(corpus.postings, corpus.n_docs, B=B, n_parts=1)
+        return sum(tp.kind == "bitmap" for p in idx.parts
+                   for tp in p.terms.values())
+    assert n_bitmaps(0) == 0
+    assert n_bitmaps(8) <= n_bitmaps(32)
+
+
+def test_partitioning_preserves_results(corpus):
+    """The paper's corpus partitioning must not change answers."""
+    idx1 = builder.build(corpus.postings, corpus.n_docs, B=16, n_parts=1)
+    idx4 = builder.build(corpus.postings, corpus.n_docs, B=16, n_parts=4)
+    for q in corpus.queries[:6]:
+        a, b = engine.query(idx1, q), engine.query(idx4, q)
+        assert a.count == b.count
+        assert np.array_equal(np.sort(a.docs), np.sort(b.docs))
+
+
+def test_decode_cache_regime(corpus):
+    """Table 4 regime (SvS over cached/decoded lists) must return identical
+    results to the per-query-decode regime, across repeated queries."""
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    cache = engine.DecodeCache(capacity_ints=1 << 22)
+    for _ in range(2):                       # second pass hits the cache
+        for q in corpus.queries[:6]:
+            a = engine.query(idx, q)
+            b = engine.query(idx, q, cache=cache)
+            assert a.count == b.count
+            assert np.array_equal(np.sort(a.docs), np.sort(b.docs))
+    assert len(cache._store) > 0
+
+
+def test_compression_stats_sane(corpus):
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    st = idx.stats()
+    assert 0 < st["bits_per_int"] < 32.0
