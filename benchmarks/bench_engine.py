@@ -1,0 +1,71 @@
+"""Batched vs sequential query-engine throughput (ISSUE 1 acceptance gate).
+
+Replays a Table-2-shaped query log (2–5 terms, skewed per-position list
+lengths) through the sequential engine (one device dispatch per fold, host
+round-trips between terms) and the shape-bucketed batched scheduler at
+several batch sizes.  Two regimes, as in the paper:
+
+  * cached   — Table 4: SvS over already-decoded lists (DecodeCache on both
+               paths); isolates intersection + dispatch, which is what the
+               batched engine accelerates.  Gate: ≥ 2× at batch ≥ 32.
+  * uncached — Table 5: decode per query; both paths pay the same host-side
+               decode, which dilutes the speedup.
+
+Derived column reports queries/sec and the speedup over the sequential run
+of the same regime.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+
+
+def _qps(fn, n_queries: int, reps: int = 3) -> float:
+    fn()                                    # warm / compile / fill cache
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return n_queries / best
+
+
+def run(quick: bool = False) -> None:
+    from repro.index import builder, corpus as corpus_lib, engine
+    from repro.index import batch as batch_lib
+
+    table = {k: corpus_lib.TABLE2_CLUEWEB[k] for k in (2, 3, 4, 5)}
+    n_docs = 1 << 14 if quick else 1 << 16
+    n_queries = 32 if quick else 128
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=11, table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    queries = corpus.queries
+    batch_sizes = [8, 32] if quick else [8, 32, 128]
+
+    for regime in ["cached", "uncached"]:
+        def make_cache():
+            return (engine.DecodeCache(capacity_ints=1 << 26)
+                    if regime == "cached" else None)
+
+        seq_cache = make_cache()
+        seq_qps = _qps(lambda: [engine.query(idx, q, cache=seq_cache)
+                                for q in queries], len(queries))
+        emit(f"engine/{regime}/sequential", 1.0 / seq_qps,
+             f"{seq_qps:.1f} q/s")
+        for bs in batch_sizes:
+            bat_cache = make_cache()
+
+            def run_batched(bs=bs, cache=bat_cache):
+                out = []
+                for lo in range(0, len(queries), bs):
+                    out.extend(batch_lib.execute_batch(
+                        idx, queries[lo: lo + bs], cache=cache))
+                return out
+
+            qps = _qps(run_batched, len(queries))
+            emit(f"engine/{regime}/batched_b{bs}", 1.0 / qps,
+                 f"{qps:.1f} q/s {qps / seq_qps:.2f}x")

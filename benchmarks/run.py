@@ -4,6 +4,7 @@
   bench_decode        Table 3      (ClusterData decode speed + bits/int)
   bench_intersect     Fig. 2a/2b   (intersection speed vs cardinality ratio)
   bench_hybrid        Tables 4/5   (HYB+M2 conjunctive queries)
+  bench_engine        beyond-paper (batched vs sequential query throughput)
   bench_gradcompress  beyond-paper (codec on the DP gradient wire)
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` runs a reduced sweep.
@@ -22,11 +23,11 @@ def main() -> None:
                     help="comma-separated subset, e.g. unpack,decode")
     args = ap.parse_args()
 
-    from benchmarks import (bench_decode, bench_gradcompress, bench_hybrid,
-                            bench_intersect, bench_unpack)
+    from benchmarks import (bench_decode, bench_engine, bench_gradcompress,
+                            bench_hybrid, bench_intersect, bench_unpack)
     mods = {"unpack": bench_unpack, "decode": bench_decode,
             "intersect": bench_intersect, "hybrid": bench_hybrid,
-            "gradcompress": bench_gradcompress}
+            "engine": bench_engine, "gradcompress": bench_gradcompress}
     subset = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")
     for name in subset:

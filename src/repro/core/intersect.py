@@ -139,6 +139,72 @@ def intersect_tiled(r, f, tile_r: int = 128, tile_f: int = 1024):
 
 
 # --------------------------------------------------------------------------
+# batch-axis variants (index/batch.py device programs)
+# --------------------------------------------------------------------------
+#
+# All take a leading batch axis and keep every intermediate on device; the
+# SvS fold over the remaining terms of a conjunctive query batch is a single
+# ``lax.scan`` so candidates never round-trip to host between terms.
+
+compact_batch = jax.jit(jax.vmap(compact))
+
+intersect_gallop_batch = jax.jit(jax.vmap(intersect_gallop))
+
+
+@partial(jax.jit, static_argnames=("tile_r", "tile_f"))
+def intersect_tiled_batch(r, f, tile_r: int = 128, tile_f: int = 1024):
+    """(B, M) × (B, N) → (B, M) mask; vmapped tile-merge."""
+    return jax.vmap(lambda rr, ff: intersect_tiled(
+        rr, ff, tile_r=tile_r, tile_f=tile_f))(r, f)
+
+
+@jax.jit
+def count_valid(r):
+    """(B, M) padded values → (B,) number of non-sentinel entries."""
+    return jnp.sum((r != SENTINEL).astype(jnp.int32), axis=-1)
+
+
+def masked_svs_scan(r, folds, fold_active, intersect_fn):
+    """Shared SvS-fold scan body, parameterized over the intersect (jnp
+    gallop/tiled or the Pallas kernel — ``index/batch.py`` reuses this for
+    its pallas backend so the pass-through semantics live in one place).
+
+    fold_active: optional (J, B) bool — rows whose slot j is inactive pass
+    through step j unchanged, letting queries of different term counts share
+    one program (padded to the group's max arity)."""
+    if fold_active is None:
+        def step(rr, f):
+            rr, _ = compact_batch(rr, intersect_fn(rr, f))
+            return rr, None
+        r, _ = lax.scan(step, r, folds)
+    else:
+        def step(rr, xs):
+            f, act = xs
+            keep = jnp.where(act[:, None], intersect_fn(rr, f),
+                             rr != SENTINEL)
+            rr, _ = compact_batch(rr, keep)
+            return rr, None
+        r, _ = lax.scan(step, r, (folds, fold_active))
+    return r, count_valid(r)
+
+
+@partial(jax.jit, static_argnames=("algo",))
+def svs_fold_batch(r, folds, algo: str = "gallop", fold_active=None):
+    """Fused SvS fold: intersect candidates ``r`` (B, M) with each of the
+    stacked fold lists ``folds`` (J, B, N) in turn, compacting on device
+    between terms.  Returns (compacted (B, M) candidates, (B,) counts)."""
+    tile_r = min(128, r.shape[-1])
+    tile_f = min(1024, folds.shape[-1])
+
+    def intersect(rr, f):
+        if algo == "tiled":
+            return intersect_tiled_batch(rr, f, tile_r=tile_r, tile_f=tile_f)
+        return intersect_gallop_batch(rr, f)
+
+    return masked_svs_scan(r, folds, fold_active, intersect)
+
+
+# --------------------------------------------------------------------------
 # galloping over a compressed list (block-skip; Skipper idea, paper §2)
 # --------------------------------------------------------------------------
 

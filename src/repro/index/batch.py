@@ -1,0 +1,299 @@
+"""Batched query execution: shape-bucketed scheduling + device-side SvS.
+
+The sequential engine (``repro.index.engine``) answers one query at a time
+and bounces candidates to host between every SvS fold — exactly the dispatch
+overhead the paper warns fast decoders drown in.  This module keeps whole
+query *batches* inside the vectorized regime:
+
+  1. **Schedule.** Every (query, index-part) work item is assigned a shape
+     signature: (pow2 bucket of the shortest list M, pow2 bucket of the
+     longest fold list N, bitmap word count, intersect algorithm).  Term
+     counts are *not* part of the signature — queries of different arity
+     merge into one program, padded to the group's max fold/probe count with
+     masked no-op folds and all-ones bitmap rows (probe identities) — and
+     the batch dimension is bucketed on a ×1.5 ladder, so the compile count
+     stays O(log² n_docs · log B) overall.
+  2. **Execute.** Each group runs as a *single* device program: the batch of
+     shortest lists (B, M) is intersected with the stacked fold lists
+     (J, B, N) by a ``lax.scan`` whose body is a vmapped intersect + compact,
+     then the surviving candidates are probed against the stacked bitmap
+     terms (J_b, B, W) — candidates never round-trip to host between terms.
+     All-bitmap queries reduce to a batched AND + popcount.  Stacking happens
+     host-side in numpy (one device transfer per operand) rather than as
+     per-item device concatenates.
+  3. **Aggregate.** Per-item results are re-assembled per query in index-part
+     order, matching the sequential engine byte for byte.
+
+Algorithm choice: under ``vmap`` the tiled merge runs lock-step across the
+batch — the slowest row sets the step count and its data-dependent early
+exit is lost — so the batched dispatcher biases much harder toward galloping
+than the sequential ratio rule (``BATCH_TILED_MAX_RATIO`` vs the paper's
+50×; re-derived in ``benchmarks/bench_engine.py``).
+
+Backends: ``backend="jax"`` uses the jnp searchsorted / tile-merge paths from
+``core.intersect``; ``backend="pallas"`` routes every fold through the Pallas
+galloping kernel (``kernels.ops.intersect_gallop_batch``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bitmap as bm
+from repro.core import codecs as codec_lib
+from repro.core import intersect as its
+from repro.index import engine
+from repro.index.builder import HybridIndex
+from repro.index.engine import QueryResult
+
+MAX_GROUP_SIZE = 128          # hard cap on items per device program
+GROUP_INT_BUDGET = 1 << 25    # cap operand ints per program: B·(J·N+M+J_b·W)
+BATCH_TILED_MAX_RATIO = 4.0   # vmapped tile-merge loses early exit; see above
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupKey:
+    """Shape signature shared by all work items of one device program.
+    Term counts are deliberately NOT part of the key: queries of different
+    arity merge into one program, padded to the group's max fold/probe count
+    with masked no-op folds and all-ones bitmap rows (probe identities)."""
+    kind: str              # 'svs' (≥1 list term) | 'bitmap' (all-bitmap)
+    m_bucket: int          # candidate buffer length M
+    n_bucket: int          # fold-list pad length N
+    words: int             # bitmap word count W (0 when no bitmaps)
+    algo: str              # 'tiled' | 'gallop' | '-'
+
+
+@dataclasses.dataclass
+class _Item:
+    qi: int                # query index within the submitted batch
+    pi: int                # index-part ordinal (aggregation order)
+    doc_lo: int
+    r: np.ndarray | None = None           # (M,) padded shortest list
+    folds: list | None = None             # J × (N,) padded fold lists
+    bm_words: np.ndarray | None = None    # (J_b, W) bitmap word rows
+
+
+def _bucket_rows(b: int) -> int:
+    """Batch-dim bucket: ~×1.5 geometric ladder (1,2,3,4,6,9,13,19,28,…).
+    Bounds the compile count per signature at O(log B) while wasting at
+    most 1/3 of rows on padding (a pow2 ladder wastes up to 2×, which
+    shows up directly as lost throughput on small groups)."""
+    size = 1
+    while size < b:
+        size = size * 3 // 2 if size >= 2 else size + 1
+    return size
+
+
+def _extend_np(vals: np.ndarray, size: int) -> np.ndarray:
+    return vals if vals.shape[0] == size else its.pad_to(vals, size)
+
+
+def schedule(index: HybridIndex, queries: list[list[int]], cache=None
+             ) -> dict[GroupKey, list[_Item]]:
+    """Bucket every (query, part) work item by shape signature.  Decoding
+    happens here (host side, optionally cached); everything downstream of
+    this point is device programs over numpy-stacked arrays."""
+    codec = codec_lib.get_codec(index.codec_name)
+    groups: dict[GroupKey, list[_Item]] = defaultdict(list)
+    for qi, term_ids in enumerate(queries):
+        for pi, part in enumerate(index.parts):
+            tps = [part.terms[t] for t in term_ids]
+            if any(tp.kind == "empty" for tp in tps):
+                continue
+            pairs = [(t, tp) for t, tp in zip(term_ids, tps)
+                     if tp.kind == "list"]
+            pairs.sort(key=lambda p: p[1].n)
+            bitmaps = [tp for tp in tps if tp.kind == "bitmap"]
+            W = len(bitmaps[0].payload) if bitmaps else 0
+            bm_words = (np.stack([tp.payload for tp in bitmaps])
+                        if bitmaps else None)
+            if not pairs:
+                key = GroupKey("bitmap", 0, 0, W, "-")
+                groups[key].append(_Item(qi, pi, part.doc_lo,
+                                         bm_words=bm_words))
+                continue
+            decoded = [engine.decode_term(part, t, tp, codec, cache=cache)
+                       for t, tp in pairs]
+            r = np.asarray(decoded[0][0])
+            M = r.shape[0]
+            N = max((v.shape[0] for v, _ in decoded[1:]), default=128)
+            folds = [_extend_np(np.asarray(v), N) for v, _ in decoded[1:]]
+            algo = ("tiled" if N / M <= BATCH_TILED_MAX_RATIO else "gallop")
+            key = GroupKey("svs", M, N, W, algo)
+            groups[key].append(_Item(qi, pi, part.doc_lo, r=r, folds=folds,
+                                     bm_words=bm_words))
+    return groups
+
+
+# --------------------------------------------------------------------------
+# device programs (one dispatch per GroupKey chunk)
+# --------------------------------------------------------------------------
+
+def _fold_pallas(r, folds, fold_active):
+    """Pallas-backend fold: every step gallops through the TPU kernel;
+    rows with an inactive slot pass through the step unchanged."""
+    from repro.kernels import ops as kernel_ops
+    return its.masked_svs_scan(r, folds, fold_active,
+                               kernel_ops.intersect_gallop_batch)
+
+
+def _probe_scan(r, words):
+    """Probe candidates (B, M) against stacked bitmap terms (J_b, B, W)."""
+    def step(rr, w):
+        mask = jax.vmap(bm.probe)(w, rr, rr != its.SENTINEL)
+        rr, _ = its.compact_batch(rr, mask)
+        return rr, None
+
+    r, _ = lax.scan(step, r, words)
+    return r, its.count_valid(r)
+
+
+@partial(jax.jit, static_argnames=("algo", "backend"))
+def _fold_program(r, folds, fold_active, algo: str, backend: str):
+    if backend == "pallas":
+        return _fold_pallas(r, folds, fold_active)
+    return its.svs_fold_batch(r, folds, algo=algo, fold_active=fold_active)
+
+
+@partial(jax.jit, static_argnames=("algo", "backend"))
+def _fold_probe_program(r, folds, fold_active, words, algo: str,
+                        backend: str):
+    if backend == "pallas":
+        r, _ = _fold_pallas(r, folds, fold_active)
+    else:
+        r, _ = its.svs_fold_batch(r, folds, algo=algo,
+                                  fold_active=fold_active)
+    return _probe_scan(r, words)
+
+
+@jax.jit
+def _bitmap_and_program(words):
+    """All-bitmap queries: AND-reduce (B, J, W) word stacks + popcount."""
+    out = words[:, 0]
+    for j in range(1, words.shape[1]):
+        out = out & words[:, j]
+    counts = jnp.sum(lax.population_count(out).astype(jnp.int32), axis=-1)
+    return out, counts
+
+
+def _run_svs_group(key: GroupKey, items: list[_Item], backend: str):
+    """One device program: stacked folds + bitmap probes for `items`.
+
+    The batch dimension is bucketed to a power of two (sentinel-padded rows,
+    results sliced back) so the jit/compile count stays bounded by the
+    signature space instead of growing with every distinct group occupancy.
+    """
+    B = len(items)
+    Bp = _bucket_rows(B)
+    J = max(len(it.folds) for it in items)
+    Jb = max(it.bm_words.shape[0] if it.bm_words is not None else 0
+             for it in items)
+    R = np.full((Bp, key.m_bucket), its.SENTINEL, dtype=np.int32)
+    for b, it in enumerate(items):
+        R[b] = it.r
+    R = jnp.asarray(R)                                          # (Bp, M)
+    F = np.full((J, Bp, key.n_bucket), its.SENTINEL, dtype=np.int32)
+    active = np.zeros((J, Bp), dtype=bool)
+    for b, it in enumerate(items):
+        for j, fold in enumerate(it.folds):
+            F[j, b] = fold
+            active[j, b] = True
+    F, active = jnp.asarray(F), jnp.asarray(active)             # (J, Bp, N)
+    if Jb:
+        # inactive slots are all-ones rows — the probe identity
+        W = np.full((Jb, Bp, key.words), 0xFFFFFFFF, dtype=np.uint32)
+        for b, it in enumerate(items):
+            if it.bm_words is not None:
+                for j in range(it.bm_words.shape[0]):
+                    W[j, b] = it.bm_words[j]
+        R, counts = _fold_probe_program(R, F, active, jnp.asarray(W),
+                                        key.algo, backend)
+    else:
+        R, counts = _fold_program(R, F, active, key.algo, backend)
+    vals = np.asarray(R)
+    cnts = np.asarray(counts)
+    return [(vals[b, : cnts[b]], int(cnts[b])) for b in range(B)]
+
+
+def _run_bitmap_group(key: GroupKey, items: list[_Item]):
+    B = len(items)
+    Bp = _bucket_rows(B)
+    J = max(it.bm_words.shape[0] for it in items)
+    # real rows pad missing terms with all-ones (AND identity); padded batch
+    # rows stay all-zero so their popcount is 0
+    words = np.zeros((Bp, J, key.words), dtype=np.uint32)
+    for b, it in enumerate(items):
+        words[b] = 0xFFFFFFFF
+        words[b, : it.bm_words.shape[0]] = it.bm_words
+    anded, counts = _bitmap_and_program(jnp.asarray(words))
+    anded = np.asarray(anded)
+    cnts = np.asarray(counts)
+    return [(bm.extract_np(anded[b]), int(cnts[b])) for b in range(B)]
+
+
+def _chunk_size(key: GroupKey, items: list[_Item],
+                max_group_size: int) -> int:
+    """Items per device program: flat cap ∧ operand-int budget (so huge
+    J·N fold stacks shrink the batch instead of exploding device memory)."""
+    if key.kind == "bitmap":
+        J = max(it.bm_words.shape[0] for it in items)
+        per_item = J * key.words
+    else:
+        J = max(len(it.folds) for it in items)
+        Jb = max(it.bm_words.shape[0] if it.bm_words is not None else 0
+                 for it in items)
+        per_item = J * key.n_bucket + key.m_bucket + Jb * key.words
+    return max(1, min(max_group_size, GROUP_INT_BUDGET // max(per_item, 1)))
+
+
+# --------------------------------------------------------------------------
+# public entry point
+# --------------------------------------------------------------------------
+
+def execute_batch(index: HybridIndex, queries: list[list[int]], *,
+                  backend: str = "jax", max_results: int = 1 << 16,
+                  max_group_size: int = MAX_GROUP_SIZE, cache=None,
+                  stats: dict | None = None) -> list[QueryResult]:
+    """Answer a batch of conjunctive queries; results are element-for-element
+    identical to ``engine.query`` run per query.
+
+    backend: 'jax' (searchsorted/tile-merge) or 'pallas' (galloping kernel).
+    stats: optional dict, filled with scheduler counters for introspection.
+    """
+    assert backend in ("jax", "pallas"), backend
+    groups = schedule(index, queries, cache=cache)
+    per_query: list[list[tuple[int, np.ndarray]]] = [[] for _ in queries]
+    counts = [0] * len(queries)
+    n_programs = 0
+    for key, items in groups.items():
+        step = _chunk_size(key, items, max_group_size)
+        for lo in range(0, len(items), step):
+            chunk = items[lo: lo + step]
+            if key.kind == "bitmap":
+                results = _run_bitmap_group(key, chunk)
+            else:
+                results = _run_svs_group(key, chunk, backend)
+            n_programs += 1
+            for it, (docs, cnt) in zip(chunk, results):
+                counts[it.qi] += cnt
+                if cnt:
+                    per_query[it.qi].append(
+                        (it.pi, docs.astype(np.int64) + it.doc_lo))
+    if stats is not None:
+        stats.update(n_groups=len(groups), n_programs=n_programs,
+                     n_items=sum(len(v) for v in groups.values()))
+    out = []
+    for qi in range(len(queries)):
+        chunks = [d for _, d in sorted(per_query[qi], key=lambda x: x[0])]
+        docs = (np.concatenate(chunks) if chunks
+                else np.zeros(0, np.int64))[:max_results]
+        out.append(QueryResult(count=counts[qi], docs=docs))
+    return out

@@ -9,6 +9,7 @@ doc-id ranges — the paper's L3-cache partitioning, which at cluster scale maps
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any
 
 import numpy as np
@@ -25,11 +26,18 @@ class TermPosting:
     raw: np.ndarray | None = None   # kept for oracle checks in tests
 
 
+_part_uids = itertools.count()
+
+
 @dataclasses.dataclass
 class IndexPart:
     doc_lo: int
     doc_hi: int
     terms: dict[int, TermPosting]
+    # process-unique id for cache keying: id(part) can be reused by the
+    # allocator after a part is freed, which would let a long-lived
+    # DecodeCache serve stale lists across index rebuilds
+    uid: int = dataclasses.field(default_factory=lambda: next(_part_uids))
 
 
 @dataclasses.dataclass

@@ -9,6 +9,18 @@ Pipeline per query, per index part — exactly the paper's:
   4. probe candidate doc ids against each bitmap term,
   5. (all-bitmap queries) AND the bitmaps directly.
 
+This module is the *sequential* path: one query at a time, with a host
+round-trip between folds.  ``repro.index.batch`` is the batched path — a
+shape-bucketed scheduler that groups queries into single device programs
+(vmapped intersects, ``lax.scan``-fused SvS folds, batched bitmap probes)
+and is the one to use under load; this module remains the reference the
+batched path is differentially tested against.
+
+Backend switch: set ``USE_KERNELS = True`` (or pass ``backend="pallas"`` to
+the batch scheduler) to route large-ratio intersections through the Pallas
+galloping kernel (``repro.kernels.ops.intersect_gallop``) instead of the
+jnp searchsorted path.
+
 JAX serving constraint: shapes are static, so decoded/padded lengths are
 bucketed to powers of two (recompile count is O(log n_docs) per algorithm) —
 the standard shape-bucketing pattern of real JAX serving systems.
@@ -27,7 +39,7 @@ from repro.core import codecs as codec_lib
 from repro.core import intersect as its
 from repro.index.builder import HybridIndex, IndexPart
 
-USE_KERNELS = False     # flipped by callers who want the Pallas path
+USE_KERNELS = False     # route big-ratio intersects through the Pallas kernel
 
 
 class DecodeCache:
@@ -51,6 +63,9 @@ class DecodeCache:
         return hit[0], hit[1]
 
     def put(self, key, vals, n):
+        old = self._store.get(key)
+        if old is not None:
+            self._size -= int(old[0].shape[0])
         self._size += int(vals.shape[0])
         self._tick += 1
         self._store[key] = (vals, n, self._tick)
@@ -79,18 +94,25 @@ def _decode_padded(codec, tp) -> tuple[jnp.ndarray, int]:
     return jnp.asarray(its.pad_to(vals, size)), tp.n
 
 
+def decode_term(part: IndexPart, tid: int, tp, codec, cache=None):
+    """Decode one term's posting list to (padded int32 vals, count), going
+    through the DecodeCache when one is supplied.  Shared by the sequential
+    path below and the batched scheduler in ``repro.index.batch``."""
+    if cache is not None:
+        hit = cache.get((part.uid, tid))
+        if hit is not None:
+            return hit
+    out = _decode_padded(codec, tp)
+    if cache is not None:
+        cache.put((part.uid, tid), out[0], out[1])
+    return out
+
+
 def _intersect_part(part: IndexPart, term_ids: list[int], codec,
                     use_packed_gallop: bool = True, cache=None):
     """Returns (padded candidate vals, count) or ('bitmap', words)."""
     def decode(tid, tp):
-        if cache is not None:
-            hit = cache.get((id(part), tid))
-            if hit is not None:
-                return hit
-        out = _decode_padded(codec, tp)
-        if cache is not None:
-            cache.put((id(part), tid), out[0], out[1])
-        return out
+        return decode_term(part, tid, tp, codec, cache=cache)
 
     tps = [part.terms[t] for t in term_ids]
     if any(tp.kind == "empty" for tp in tps):
@@ -117,6 +139,10 @@ def _intersect_part(part: IndexPart, term_ids: list[int], codec,
             # paper's galloping+skip: search the block-max index, decode only
             # candidate blocks — the long list is never fully decoded.
             mask = its.intersect_packed(r, tp.payload)
+        elif USE_KERNELS and ratio > its.TILED_MAX_RATIO:
+            from repro.kernels import ops as kernel_ops
+            f, _ = decode(id_of[id(tp)], tp)
+            mask = kernel_ops.intersect_gallop(r, f)
         else:
             f, _ = decode(id_of[id(tp)], tp)
             mask = its.intersect_auto(r, f, r_count, tp.n)

@@ -27,18 +27,30 @@ TILE_R = 128
 SENTINEL = np.int32(2**31 - 1)
 
 
+def _gallop_body(r, f, log2n: int):
+    """Branchless lower_bound of each lane of r into f + membership test."""
+    lo = jnp.full(r.shape, -1, dtype=jnp.int32)
+    for k in range(log2n - 1, -1, -1):               # branchless lower_bound
+        probe = lo + (1 << k)
+        vals = jnp.take(f, probe)                    # vector gather from VMEM
+        lo = jnp.where(vals < r, probe, lo)
+    pos = jnp.minimum(lo + 1, (1 << log2n) - 1)
+    return (jnp.take(f, pos) == r) & (r != SENTINEL)
+
+
 def make_gallop_kernel(log2n: int):
     def kernel(r_ref, f_ref, out_ref):
         r = r_ref[...]                               # (TILE_R,) int32
         f = f_ref[...]                               # (N,) int32, N = 2**log2n
-        lo = jnp.full((TILE_R,), -1, dtype=jnp.int32)
-        for k in range(log2n - 1, -1, -1):           # branchless lower_bound
-            probe = lo + (1 << k)
-            vals = jnp.take(f, probe)                # vector gather from VMEM
-            lo = jnp.where(vals < r, probe, lo)
-        pos = jnp.minimum(lo + 1, (1 << log2n) - 1)
-        hit = (jnp.take(f, pos) == r) & (r != SENTINEL)
-        out_ref[...] = hit
+        out_ref[...] = _gallop_body(r, f, log2n)
+    return kernel
+
+
+def make_gallop_kernel_batched(log2n: int):
+    def kernel(r_ref, f_ref, out_ref):
+        r = r_ref[0, :]                              # (TILE_R,) int32
+        f = f_ref[0, :]                              # (N,) this query's long list
+        out_ref[0, :] = _gallop_body(r, f, log2n)
     return kernel
 
 
@@ -62,5 +74,32 @@ def gallop_tiles(r, f, interpret: bool = True):
         make_gallop_kernel(log2n),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M,), jnp.bool_),
+        interpret=interpret,
+    )(r.astype(jnp.int32), f.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gallop_tiles_batched(r, f, interpret: bool = True):
+    """Batched galloping: r (B, M) sentinel-padded with M % 128 == 0; f (B, N)
+    sentinel-padded, N a power of two.  Grid is (batch row, r-tile); each step
+    holds one query's long list in VMEM and binary-searches a 128-lane tile of
+    its candidates.  Returns (B, M) bool match mask."""
+    B, M = r.shape
+    Bf, N = f.shape
+    assert B == Bf and M % TILE_R == 0
+    log2n = int(np.log2(N))
+    assert (1 << log2n) == N, "f must be padded to a power of two"
+    grid_spec = pl.GridSpec(
+        grid=(B, M // TILE_R),
+        in_specs=[
+            pl.BlockSpec((1, TILE_R), lambda b, i: (b, i)),
+            pl.BlockSpec((1, N), lambda b, i: (b, 0)),   # row-resident f
+        ],
+        out_specs=pl.BlockSpec((1, TILE_R), lambda b, i: (b, i)),
+    )
+    return pl.pallas_call(
+        make_gallop_kernel_batched(log2n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.bool_),
         interpret=interpret,
     )(r.astype(jnp.int32), f.astype(jnp.int32))

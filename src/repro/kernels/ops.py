@@ -112,3 +112,14 @@ def intersect_gallop(r, f):
             [f, jnp.full((n_pow - N,), SENTINEL, dtype=jnp.int32)])
     mask = _intersect_gallop.gallop_tiles(r, f, interpret=INTERPRET)
     return mask[:M]
+
+
+def intersect_gallop_batch(r, f):
+    """Kernel-path batched galloping: r (B, M), f (B, N) → (B, M) mask.
+    Inputs must already be sentinel-padded to M % 128 == 0 and N a power of
+    two (index/batch.py buckets guarantee this); falls back to the vmapped
+    jnp path when a query's long list exceeds the VMEM cap."""
+    if f.shape[-1] > GALLOP_VMEM_CAP:
+        from repro.core import intersect as core_intersect
+        return core_intersect.intersect_gallop_batch(r, f)
+    return _intersect_gallop.gallop_tiles_batched(r, f, interpret=INTERPRET)

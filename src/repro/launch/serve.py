@@ -1,10 +1,15 @@
 """Serving launcher.
 
-  --arch paper-index : batched conjunctive query serving (the paper's system)
+  --arch paper-index : conjunctive query serving (the paper's system);
+                       --batch N > 1 routes through the shape-bucketed
+                       batched scheduler (repro.index.batch), --backend
+                       {jax,pallas} picks the intersect backend
   --arch <lm id>     : prefill + greedy decode on the smoke-reduced model
   --arch <recsys id> : batched scoring
 
   PYTHONPATH=src python -m repro.launch.serve --arch paper-index --queries 20
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-index \\
+      --queries 256 --batch 64 --backend jax
 """
 
 from __future__ import annotations
@@ -25,12 +30,39 @@ def serve_index(args):
                                    seed=5)
     idx = builder.build(corpus.postings, corpus.n_docs,
                         codec_name="fastpfor-d1", B=16, n_parts=2)
-    engine.query(idx, corpus.queries[0])
+    queries = corpus.queries
+    if args.batch > 1:
+        from repro.index import batch as batch_lib
+
+        def run_all():
+            out, n_programs = [], 0
+            for lo in range(0, len(queries), args.batch):
+                stats: dict = {}
+                out.extend(batch_lib.execute_batch(
+                    idx, queries[lo: lo + args.batch],
+                    backend=args.backend, stats=stats))
+                n_programs += stats["n_programs"]
+            return out, n_programs
+
+        run_all()                               # warm / compile
+        t0 = time.perf_counter()
+        results, n_programs = run_all()
+        dt = time.perf_counter() - t0
+        hits = sum(r.count for r in results)
+        print(f"[serve] paper-index --batch {args.batch} ({args.backend}): "
+              f"{len(queries)} queries, {len(queries) / dt:.1f} q/s "
+              f"({dt / len(queries) * 1e3:.2f} ms/query), {hits} hits, "
+              f"{n_programs} device programs, "
+              f"{idx.stats()['bits_per_int']:.2f} bits/int")
+        return
+    for q in queries:                       # warm / compile every signature
+        engine.query(idx, q)
     t0 = time.perf_counter()
-    hits = sum(engine.query(idx, q).count for q in corpus.queries)
-    dt = (time.perf_counter() - t0) / len(corpus.queries) * 1e3
-    print(f"[serve] paper-index: {len(corpus.queries)} queries, "
-          f"{dt:.2f} ms/query, {hits} hits, "
+    hits = sum(engine.query(idx, q).count for q in queries)
+    dt = time.perf_counter() - t0
+    print(f"[serve] paper-index: {len(queries)} queries, "
+          f"{len(queries) / dt:.1f} q/s "
+          f"({dt / len(queries) * 1e3:.2f} ms/query), {hits} hits, "
           f"{idx.stats()['bits_per_int']:.2f} bits/int")
 
 
@@ -39,16 +71,17 @@ def serve_lm(args, spec):
     from repro.serve.steps import greedy_generate
     cfg = spec.smoke_config()
     params = init_params(jax.random.PRNGKey(0), cfg)
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, 16),
+    batch = args.batch or 4
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, 16),
                                 0, cfg.vocab)
     t0 = time.perf_counter()
     out = greedy_generate(params, cfg, prompt, max_new=args.tokens,
                           cache_len=16 + args.tokens)
     jax.block_until_ready(out)
     dt = time.perf_counter() - t0
-    print(f"[serve] {spec.arch_id}: batch={args.batch} generated "
+    print(f"[serve] {spec.arch_id}: batch={batch} generated "
           f"{args.tokens} tokens in {dt:.2f}s "
-          f"({args.batch * args.tokens / dt:.1f} tok/s); sample: "
+          f"({batch * args.tokens / dt:.1f} tok/s); sample: "
           f"{np.asarray(out[0, :8]).tolist()}")
 
 
@@ -61,14 +94,15 @@ def serve_recsys(args, spec):
     mk = {"din": recsys_data.din_batch, "sasrec": recsys_data.seq_batch,
           "bert4rec": recsys_data.bert4rec_batch,
           "mind": recsys_data.mind_batch}[cfg.arch]
-    b = {k: jnp.asarray(v) for k, v in mk(rng, cfg, args.batch).items()}
+    batch = args.batch or 4
+    b = {k: jnp.asarray(v) for k, v in mk(rng, cfg, batch).items()}
     score = jax.jit(lambda p, bb: recsys.SCORE[cfg.arch](p, bb, cfg))
     score(params, b)                        # warm
     t0 = time.perf_counter()
     s = score(params, b)
     jax.block_until_ready(s)
     dt = time.perf_counter() - t0
-    print(f"[serve] {spec.arch_id}: scored batch={args.batch} in "
+    print(f"[serve] {spec.arch_id}: scored batch={batch} in "
           f"{dt * 1e3:.2f} ms; mean score {float(s.mean()):.4f}")
 
 
@@ -76,7 +110,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--queries", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="paper-index: >1 enables batched scheduler; "
+                         "lm/recsys: batch size (default 4)")
+    ap.add_argument("--backend", choices=["jax", "pallas"], default="jax")
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
     if args.arch == "paper-index":

@@ -1,0 +1,46 @@
+"""Optional-`hypothesis` shim so the tier-1 suite collects on clean machines.
+
+Import ``given``, ``settings`` and ``st`` from here instead of `hypothesis`.
+When the real package is installed, these are the real objects.  When it is
+not, property tests decorated with ``@given(...)`` are replaced by a no-arg
+stub carrying a skip marker with a clear reason, and ``settings``/``st``
+become inert stand-ins (the strategy objects they build are never executed).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Builds inert placeholders for st.integers(...), st.data(), ..."""
+
+        def __getattr__(self, name):
+            def make(*args, **kwargs):
+                return None
+            return make
+
+    st = _StrategyStub()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # Return a no-arg stub: pytest must not try to resolve the
+            # strategy parameters of the wrapped property test as fixtures.
+            @pytest.mark.skip(reason="hypothesis not installed "
+                                     "(see requirements-dev.txt)")
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bitmap, bitpack
 from repro.core import intersect as its
@@ -73,6 +73,40 @@ def test_property_intersection(seed, m, n):
     expect = np.intersect1d(r, f)
     assert np.array_equal(_run(its.intersect_gallop, r, f), expect)
     assert np.array_equal(_run(its.intersect_tiled, r, f), expect)
+
+
+def test_svs_fold_batch_with_and_without_active_mask(rng):
+    """Batch-axis fused fold (index/batch.py substrate): both the plain and
+    the arity-merged (fold_active) scan bodies must match the oracle."""
+    M, N = 256, 1024
+    rows, folds0, folds1, expect_full, expect_one = [], [], [], [], []
+    for _ in range(3):
+        r, f0 = _pair(rng, 150, 700)
+        _, f1 = _pair(rng, 150, 700)
+        rows.append(its.pad_to(r, M))
+        folds0.append(its.pad_to(f0, N))
+        folds1.append(its.pad_to(f1, N))
+        expect_one.append(its.intersect_ref(r, f0))
+        expect_full.append(its.intersect_ref(expect_one[-1], f1))
+    R = jnp.asarray(np.stack(rows))
+    F = jnp.asarray(np.stack([np.stack(folds0), np.stack(folds1)]))
+
+    out, cnt = its.svs_fold_batch(R, F, algo="gallop")
+    for b in range(3):
+        assert np.array_equal(np.asarray(out)[b, : int(cnt[b])],
+                              expect_full[b])
+    out, cnt = its.svs_fold_batch(R, F, algo="tiled")
+    for b in range(3):
+        assert np.array_equal(np.asarray(out)[b, : int(cnt[b])],
+                              expect_full[b])
+
+    # arity merge: row 2 deactivates the second fold and must pass through
+    active = jnp.asarray(np.array([[True, True, True],
+                                   [True, True, False]]))
+    out, cnt = its.svs_fold_batch(R, F, algo="gallop", fold_active=active)
+    for b, expect in enumerate([expect_full[0], expect_full[1],
+                                expect_one[2]]):
+        assert np.array_equal(np.asarray(out)[b, : int(cnt[b])], expect)
 
 
 def test_bitmap_ops(rng):
