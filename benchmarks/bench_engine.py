@@ -1,4 +1,5 @@
-"""Batched vs sequential query-engine throughput (ISSUE 1 acceptance gate).
+"""Batched vs sequential query-engine throughput + partial-decode accounting
+(ISSUE 1 + ISSUE 2 acceptance gates).
 
 Replays a Table-2-shaped query log (2–5 terms, skewed per-position list
 lengths) through the sequential engine (one device dispatch per fold, host
@@ -11,15 +12,27 @@ several batch sizes.  Two regimes, as in the paper:
   * uncached — Table 5: decode per query; both paths pay the same host-side
                decode, which dilutes the speedup.
 
-Derived column reports queries/sec and the speedup over the sequential run
-of the same regime.
+A third section replays a *skewed-ratio* log (tiny first term, very long
+second term) and reports decoded-ints/query with the posting-source skip
+path off vs on (``execute_batch(skip=...)``): the ISSUE 2 gate is a ≥ 5×
+drop while results stay byte-identical to the sequential engine on both
+backends.
+
+Derived column reports queries/sec (and decoded ints/query where that is
+the figure of merit).  CLI: ``--smoke`` runs the reduced sweep standalone
+(CI smoke gate), ``--json PATH`` additionally records a machine-readable
+baseline (BENCH_engine.json).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 from benchmarks.common import emit
+
+RESULTS: dict[str, float] = {}
 
 
 def _qps(fn, n_queries: int, reps: int = 3) -> float:
@@ -32,7 +45,7 @@ def _qps(fn, n_queries: int, reps: int = 3) -> float:
     return n_queries / best
 
 
-def run(quick: bool = False) -> None:
+def _throughput(quick: bool) -> None:
     from repro.index import builder, corpus as corpus_lib, engine
     from repro.index import batch as batch_lib
 
@@ -56,6 +69,7 @@ def run(quick: bool = False) -> None:
                                 for q in queries], len(queries))
         emit(f"engine/{regime}/sequential", 1.0 / seq_qps,
              f"{seq_qps:.1f} q/s")
+        RESULTS[f"{regime}/sequential_qps"] = round(seq_qps, 1)
         for bs in batch_sizes:
             bat_cache = make_cache()
 
@@ -69,3 +83,84 @@ def run(quick: bool = False) -> None:
             qps = _qps(run_batched, len(queries))
             emit(f"engine/{regime}/batched_b{bs}", 1.0 / qps,
                  f"{qps:.1f} q/s {qps / seq_qps:.2f}x")
+            RESULTS[f"{regime}/batched_b{bs}_qps"] = round(qps, 1)
+
+
+def _skewed(quick: bool) -> None:
+    """Decoded-ints/query with the skip path off vs on (ISSUE 2 gate)."""
+    from repro.index import builder, corpus as corpus_lib, engine
+    from repro.index import batch as batch_lib
+    import numpy as np
+
+    # tiny first term, very long second term: the regime where galloping
+    # over the block-max index beats decoding (paper §6.5); 1024-int blocks
+    # (bp8) give the skip index enough granularity to prune
+    n_docs = 1 << 17 if quick else 1 << 18
+    n_queries = 8 if quick else 16
+    table = {2: (100.0, [0.8 * (1 << 18) / n_docs,
+                         38000.0 * (1 << 18) / n_docs])}
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=7, table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="bp8-d1", B=0, n_parts=1)
+    queries = corpus.queries
+    seq = [engine.query(idx, q) for q in queries]
+
+    decoded = {}
+    for skip in (False, True):
+        label = "skip_on" if skip else "skip_off"
+        stats: dict = {}
+        out = batch_lib.execute_batch(idx, queries, skip=skip, stats=stats)
+        for a, b in zip(out, seq):              # byte-identical gate
+            assert a.count == b.count and np.array_equal(a.docs, b.docs)
+        dt = _qps(lambda s=skip: batch_lib.execute_batch(
+            idx, queries, skip=s), len(queries))
+        per_q = stats["decoded_ints"] / len(queries)
+        decoded[label] = per_q
+        emit(f"engine/skewed/batched_{label}", 1.0 / dt,
+             f"{dt:.1f} q/s {per_q:.0f} decoded ints/q")
+        RESULTS[f"skewed/batched_{label}_qps"] = round(dt, 1)
+        RESULTS[f"skewed/batched_{label}_decoded_ints_per_query"] = \
+            round(per_q)
+    ratio = decoded["skip_off"] / max(decoded["skip_on"], 1)
+    emit("engine/skewed/partial_decode_ratio", 0.0, f"{ratio:.1f}x fewer")
+    RESULTS["skewed/partial_decode_ratio"] = round(ratio, 1)
+
+    # pallas backend: identical results, decoded through the fused kernel
+    outp = batch_lib.execute_batch(idx, queries, backend="pallas")
+    for a, b in zip(outp, seq):
+        assert a.count == b.count and np.array_equal(a.docs, b.docs)
+    dt = _qps(lambda: batch_lib.execute_batch(
+        idx, queries, backend="pallas"), len(queries))
+    emit("engine/skewed/batched_pallas", 1.0 / dt, f"{dt:.1f} q/s")
+    RESULTS["skewed/batched_pallas_qps"] = round(dt, 1)
+
+
+def run(quick: bool = False) -> None:
+    _throughput(quick)
+    _skewed(quick)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep (CI smoke gate)")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the measured baseline to this path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.smoke)
+    if args.json:
+        payload = {
+            "bench": "bench_engine",
+            "quick": bool(args.smoke),
+            "results": RESULTS,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

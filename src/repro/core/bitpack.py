@@ -67,6 +67,87 @@ jax.tree_util.register_pytree_node(
 
 
 # --------------------------------------------------------------------------
+# batch-uniform layout (posting-source layer, DESIGN.md §2.6)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedLayout:
+    """Host-side (numpy) view of one compressed list, padded to shared
+    bucket sizes so a batch of lists stacks into uniform device operands.
+
+    Both ``PackedList`` and ``fastpfor.PatchedList`` project onto this one
+    shape family (a plain bitpacked list simply has zero exceptions), which
+    is what lets the batched scheduler treat every skip-capable codec
+    through a single program signature.
+    """
+    words: np.ndarray      # (t_pad, 128) uint32
+    widths: np.ndarray     # (k_pad,) int32   (pad blocks: width 0)
+    offsets: np.ndarray    # (k_pad,) int32   (pad blocks: clamped in-range)
+    maxes: np.ndarray      # (k_pad,) uint32  (edge-padded → stays monotone)
+    exc_pos: np.ndarray    # (e_pad,) int32   (pad entries: -1 → dropped)
+    exc_add: np.ndarray    # (e_pad,) uint32
+    n: int
+    mode: str
+    block_rows: int
+
+
+def skip_capable(payload) -> bool:
+    """True when the payload carries the flat packed-block layout (and so a
+    block-max skip index): PackedList and fastpfor.PatchedList both do."""
+    return all(hasattr(payload, a)
+               for a in ("flat_words", "widths", "offsets", "maxes"))
+
+
+def layout_np(payload, k_pad: int, t_pad: int, e_pad: int) -> PackedLayout:
+    """Project a skip-capable payload onto the batch-uniform layout.
+
+    k_pad/t_pad/e_pad are the group's shared block/word-row/exception
+    buckets (each ≥ the payload's own counts).
+    """
+    widths = np.asarray(payload.widths)
+    offsets = np.asarray(payload.offsets)
+    maxes = np.asarray(payload.maxes)
+    words = np.asarray(payload.flat_words)
+    K, T = widths.shape[0], words.shape[0]
+    assert K <= k_pad and T <= t_pad, (K, k_pad, T, t_pad)
+    w = np.zeros(k_pad, np.int32)
+    w[:K] = widths
+    o = np.full(k_pad, max(T - 1, 0), np.int32)
+    o[:K] = offsets
+    mx = np.zeros(k_pad, np.uint32)
+    mx[:K] = maxes
+    mx[K:] = maxes[-1] if K else 0          # edge pad keeps maxes monotone
+    fw = np.zeros((t_pad, LANES), np.uint32)
+    fw[:T] = words
+    ep_src = np.asarray(getattr(payload, "exc_pos", np.zeros(0, np.int32)))
+    ea_src = np.asarray(getattr(payload, "exc_add", np.zeros(0, np.uint32)))
+    E = ep_src.shape[0]
+    assert E <= e_pad, (E, e_pad)
+    ep = np.full(e_pad, -1, np.int32)
+    ep[:E] = ep_src
+    ea = np.zeros(e_pad, np.uint32)
+    ea[:E] = ea_src
+    return PackedLayout(words=fw, widths=w, offsets=o, maxes=mx,
+                        exc_pos=ep, exc_add=ea, n=payload.n,
+                        mode=payload.mode, block_rows=payload.block_rows)
+
+
+def candidate_block_ids(maxes_np: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Unique block ids whose value range may contain any of ``values``
+    (host-side probe of the block-max skip index).  ``values`` are the valid
+    (unpadded) candidate doc ids; since SvS candidates only shrink, ids
+    computed from the initial candidate set stay a superset for every
+    later fold."""
+    mx = np.asarray(maxes_np).astype(np.int64)
+    v = np.asarray(values, dtype=np.int64)
+    if mx.size == 0 or v.size == 0:
+        return np.zeros(0, np.int32)
+    blk = np.searchsorted(mx, v, side="left")
+    blk = np.minimum(blk, mx.size - 1)
+    return np.unique(blk).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
 # host-side pack (numpy)
 # --------------------------------------------------------------------------
 

@@ -166,8 +166,12 @@ def count_valid(r):
 
 def masked_svs_scan(r, folds, fold_active, intersect_fn):
     """Shared SvS-fold scan body, parameterized over the intersect (jnp
-    gallop/tiled or the Pallas kernel — ``index/batch.py`` reuses this for
-    its pallas backend so the pass-through semantics live in one place).
+    gallop/tiled, the packed partial decode, or the Pallas kernels —
+    ``index/batch.py`` reuses this for every fold family so the
+    pass-through semantics live in one place).  ``folds`` may be a plain
+    (J, B, N) value stack or any pytree of (J, ...)-leading stacked
+    operands (``lax.scan`` slices pytrees), e.g. the tuple of batch-uniform
+    packed layout arrays.
 
     fold_active: optional (J, B) bool — rows whose slot j is inactive pass
     through step j unchanged, letting queries of different term counts share
@@ -227,6 +231,74 @@ def intersect_packed(r, packed_f: bitpack.PackedList):
     return _packed_gallop(r, packed_f.flat_words, packed_f.widths,
                           packed_f.offsets, packed_f.maxes, packed_f.mode,
                           packed_f.block_rows)
+
+
+# --------------------------------------------------------------------------
+# candidate-block partial decode (posting-source layer, DESIGN.md §2.6)
+# --------------------------------------------------------------------------
+#
+# ``_packed_gallop`` above decodes one block *per candidate element* — with
+# duplicates, so its decode volume grows with m, not with the number of
+# distinct blocks touched.  The functions below take the deduplicated
+# candidate block-id list (host-precomputed from the block-max skip index,
+# ``bitpack.candidate_block_ids``) and decode each touched block exactly
+# once: partial decode proportional to the *blocks hit*, which is the
+# paper's §6.5 regime and what the batched engine stacks across queries.
+
+def _packed_candidates_body(r, words, widths, offsets, maxes, blk_ids,
+                            exc_pos, exc_add, mode: str, block_rows: int):
+    """r: (m,) padded int32; blk_ids: (C,) sorted unique candidate block ids,
+    padded with Kp (= maxes length) which decodes to all-SENTINEL slots.
+    Returns a (m,) match mask.  Exceptions (FastPFOR patches) landing inside
+    candidate blocks are applied before the prefix sum; exc_pos is padded
+    with -1."""
+    Kp = maxes.shape[0]
+    C = blk_ids.shape[0]
+    per = block_rows * bitpack.LANES
+    pad = blk_ids >= Kp                                     # padded slots
+    ids = jnp.minimum(blk_ids, Kp - 1)
+    seeds = jnp.where(ids > 0, jnp.take(maxes, jnp.maximum(ids - 1, 0)),
+                      jnp.uint32(0))
+    d = bitpack.unpack_deltas(words, jnp.take(widths, ids),
+                              jnp.take(offsets, ids), block_rows)
+    if exc_pos.shape[0]:
+        eb = exc_pos // per
+        slot = jnp.clip(jnp.searchsorted(blk_ids, eb), 0, C - 1)
+        ok = (exc_pos >= 0) & (jnp.take(blk_ids, slot) == eb)
+        tgt = jnp.where(ok, slot * per + exc_pos % per, C * per)  # OOB → drop
+        d = d.reshape(-1).at[tgt].add(exc_add, mode="drop").reshape(d.shape)
+    vals = deltas_lib.prefix_sum(d, seeds, mode)            # (C, R, 128)
+    # blocks are ascending and values within a block are sorted, so the
+    # concatenation is globally sorted; padded slots become SENTINEL (max
+    # int32) and stay sorted at the tail.
+    flat = vals.reshape(-1).astype(jnp.int32)
+    flat = jnp.where(jnp.repeat(pad, per), SENTINEL, flat)
+    pos = jnp.searchsorted(flat, r, side="left")
+    hit = jnp.take(flat, jnp.clip(pos, 0, C * per - 1)) == r
+    return hit & (r != SENTINEL)
+
+
+@partial(jax.jit, static_argnames=("mode", "block_rows"))
+def intersect_packed_candidates(r, words, widths, offsets, maxes, blk_ids,
+                                exc_pos, exc_add, mode: str,
+                                block_rows: int = bitpack.DEFAULT_ROWS):
+    """Skip-aware partial-decode intersection of padded candidates ``r``
+    against one compressed list in the batch-uniform layout."""
+    return _packed_candidates_body(r, words, widths, offsets, maxes, blk_ids,
+                                   exc_pos, exc_add, mode, block_rows)
+
+
+@partial(jax.jit, static_argnames=("mode", "block_rows"))
+def intersect_packed_batch(r, words, widths, offsets, maxes, blk_ids,
+                           exc_pos, exc_add, mode: str,
+                           block_rows: int = bitpack.DEFAULT_ROWS):
+    """Batched skip-aware partial decode: every operand carries a leading
+    batch axis — r (B, M), words (B, T, 128), widths/offsets/maxes (B, K),
+    blk_ids (B, C), exc_pos/exc_add (B, E) — and each row decodes only its
+    own candidate blocks.  Returns a (B, M) match mask."""
+    return jax.vmap(lambda *a: _packed_candidates_body(
+        *a, mode=mode, block_rows=block_rows))(
+            r, words, widths, offsets, maxes, blk_ids, exc_pos, exc_add)
 
 
 # --------------------------------------------------------------------------

@@ -7,20 +7,30 @@ query *batches* inside the vectorized regime:
 
   1. **Schedule.** Every (query, index-part) work item is assigned a shape
      signature: (pow2 bucket of the shortest list M, pow2 bucket of the
-     longest fold list N, bitmap word count, intersect algorithm).  Term
-     counts are *not* part of the signature — queries of different arity
-     merge into one program, padded to the group's max fold/probe count with
-     masked no-op folds and all-ones bitmap rows (probe identities) — and
-     the batch dimension is bucketed on a ×1.5 ladder, so the compile count
-     stays O(log² n_docs · log B) overall.
+     longest fold list N, bitmap word count, intersect algorithm, packed
+     signature).  Fold terms resolve through the posting-source layer
+     (``repro.index.source``): short lists decode (and cache), long
+     skip-capable lists stay *packed* and carry a batch-uniform layout —
+     words/widths/offsets/maxes buckets plus the host-precomputed candidate
+     block ids — so compressed long lists are never fully decoded in the
+     batch regime either.  Term counts are *not* part of the signature —
+     queries of different arity merge into one program, padded to the
+     group's max fold/probe count with masked no-op folds and all-ones
+     bitmap rows (probe identities) — and the batch dimension is bucketed
+     on a ×1.5 ladder, so the compile count stays O(log² n_docs · log B)
+     overall.
   2. **Execute.** Each group runs as a *single* device program: the batch of
-     shortest lists (B, M) is intersected with the stacked fold lists
-     (J, B, N) by a ``lax.scan`` whose body is a vmapped intersect + compact,
-     then the surviving candidates are probed against the stacked bitmap
-     terms (J_b, B, W) — candidates never round-trip to host between terms.
-     All-bitmap queries reduce to a batched AND + popcount.  Stacking happens
-     host-side in numpy (one device transfer per operand) rather than as
-     per-item device concatenates.
+     shortest lists (B, M) is intersected with the stacked decoded fold
+     lists (J, B, N) by a ``lax.scan`` whose body is a vmapped intersect +
+     compact, then with the stacked *packed* folds (tuple of (Jp, B, ...)
+     layout arrays, each step a skip-aware partial decode of candidate
+     blocks only), then the surviving candidates are probed against the
+     stacked bitmap terms (J_b, B, W) — candidates never round-trip to host
+     between terms.  Fold order is decoded-then-packed, which is safe
+     because set intersection commutes and the candidate buffer stays
+     sorted under ``compact``.  All-bitmap queries reduce to a batched AND
+     + popcount.  Stacking happens host-side in numpy (one device transfer
+     per operand) rather than as per-item device concatenates.
   3. **Aggregate.** Per-item results are re-assembled per query in index-part
      order, matching the sequential engine byte for byte.
 
@@ -49,7 +59,7 @@ from jax import lax
 from repro.core import bitmap as bm
 from repro.core import codecs as codec_lib
 from repro.core import intersect as its
-from repro.index import engine
+from repro.index import source
 from repro.index.builder import HybridIndex
 from repro.index.engine import QueryResult
 
@@ -63,12 +73,16 @@ class GroupKey:
     """Shape signature shared by all work items of one device program.
     Term counts are deliberately NOT part of the key: queries of different
     arity merge into one program, padded to the group's max fold/probe count
-    with masked no-op folds and all-ones bitmap rows (probe identities)."""
+    with masked no-op folds and all-ones bitmap rows (probe identities).
+    Packed folds replace the fold-length bucket with their block-layout
+    buckets: (k_pad blocks, t_pad word rows, c_pad candidate blocks,
+    e_pad exceptions, block_rows, delta mode)."""
     kind: str              # 'svs' (≥1 list term) | 'bitmap' (all-bitmap)
     m_bucket: int          # candidate buffer length M
-    n_bucket: int          # fold-list pad length N
+    n_bucket: int          # decoded fold-list pad length N
     words: int             # bitmap word count W (0 when no bitmaps)
     algo: str              # 'tiled' | 'gallop' | '-'
+    packed: tuple | None = None   # (k_pad, t_pad, c_pad, e_pad, rows, mode)
 
 
 @dataclasses.dataclass
@@ -77,7 +91,8 @@ class _Item:
     pi: int                # index-part ordinal (aggregation order)
     doc_lo: int
     r: np.ndarray | None = None           # (M,) padded shortest list
-    folds: list | None = None             # J × (N,) padded fold lists
+    folds: list | None = None             # J × (N,) padded decoded folds
+    psrc: list | None = None              # Jp × (PackedLayout, blk_ids)
     bm_words: np.ndarray | None = None    # (J_b, W) bitmap word rows
 
 
@@ -96,11 +111,14 @@ def _extend_np(vals: np.ndarray, size: int) -> np.ndarray:
     return vals if vals.shape[0] == size else its.pad_to(vals, size)
 
 
-def schedule(index: HybridIndex, queries: list[list[int]], cache=None
+def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
+             skip: bool = True, stats: dict | None = None
              ) -> dict[GroupKey, list[_Item]]:
-    """Bucket every (query, part) work item by shape signature.  Decoding
-    happens here (host side, optionally cached); everything downstream of
-    this point is device programs over numpy-stacked arrays."""
+    """Bucket every (query, part) work item by shape signature.  Terms
+    resolve through the posting-source layer here (host side, optionally
+    cached): short lists decode, long skip-capable lists keep their packed
+    layout plus host-searched candidate block ids.  Everything downstream
+    of this point is device programs over numpy-stacked arrays."""
     codec = codec_lib.get_codec(index.codec_name)
     groups: dict[GroupKey, list[_Item]] = defaultdict(list)
     for qi, term_ids in enumerate(queries):
@@ -120,16 +138,61 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None
                 groups[key].append(_Item(qi, pi, part.doc_lo,
                                          bm_words=bm_words))
                 continue
-            decoded = [engine.decode_term(part, t, tp, codec, cache=cache)
-                       for t, tp in pairs]
-            r = np.asarray(decoded[0][0])
+            seed_t, seed_tp = pairs[0]
+            seed = source.resolve(part, seed_t, seed_tp, codec, cache=cache,
+                                  r_count=None, stats=stats)
+            r = np.asarray(seed.vals)
             M = r.shape[0]
-            N = max((v.shape[0] for v, _ in decoded[1:]), default=128)
-            folds = [_extend_np(np.asarray(v), N) for v, _ in decoded[1:]]
+            dec, packed = [], []
+            for t, tp in pairs[1:]:
+                src = source.resolve(part, t, tp, codec, cache=cache,
+                                     r_count=seed_tp.n, skip=skip,
+                                     stats=stats)
+                if isinstance(src, source.PackedSource):
+                    packed.append((t, tp, src))
+                else:
+                    dec.append(np.asarray(src.vals))
+            psig, psrc = None, None
+            if packed:
+                # stacking along the fold axis needs one block geometry:
+                # keep the longest fold's (block_rows, mode), decode the
+                # rare mismatch (adaptive block sizing on mid-length lists)
+                ref = max(packed, key=lambda p: p[2].n)[2]
+                rows, mode = ref.block_rows, ref.mode
+                keep, demote = [], []
+                for p in packed:
+                    same = (p[2].block_rows == rows and p[2].mode == mode)
+                    (keep if same else demote).append(p)
+                for t, tp, _ in demote:
+                    # cache=None: a demoted long list must not evict the
+                    # int-budgeted cache's hot short lists
+                    src = source.resolve(part, t, tp, codec, cache=None,
+                                         skip=False, stats=stats)
+                    dec.append(np.asarray(src.vals))
+                r_valid = r[: seed.n]
+                cand = [(s, s.candidate_block_ids(r_valid))
+                        for _, _, s in keep]
+                k_pad = max(its.pow2_bucket(s.num_blocks, floor=1)
+                            for s, _ in cand)
+                t_pad = max(its.pow2_bucket(s.num_rows, floor=1)
+                            for s, _ in cand)
+                c_pad = max(its.pow2_bucket(len(b), floor=source.CAND_FLOOR)
+                            for _, b in cand)
+                e_max = max(s.num_exceptions for s, _ in cand)
+                e_pad = its.pow2_bucket(e_max, floor=1) if e_max else 0
+                psig = (k_pad, t_pad, c_pad, e_pad, rows, mode)
+                psrc = [(source.cached_layout_np(s, (k_pad, t_pad, e_pad)),
+                         source.pad_block_ids(b, c_pad, k_pad))
+                        for s, b in cand]
+                source._bump(stats, "skip_folds", len(psrc))
+                source._bump(stats, "decoded_ints",
+                             len(psrc) * c_pad * rows * 128)
+            N = max((v.shape[0] for v in dec), default=128)
+            folds = [_extend_np(v, N) for v in dec]
             algo = ("tiled" if N / M <= BATCH_TILED_MAX_RATIO else "gallop")
-            key = GroupKey("svs", M, N, W, algo)
+            key = GroupKey("svs", M, N, W, algo, psig)
             groups[key].append(_Item(qi, pi, part.doc_lo, r=r, folds=folds,
-                                     bm_words=bm_words))
+                                     psrc=psrc, bm_words=bm_words))
     return groups
 
 
@@ -156,22 +219,32 @@ def _probe_scan(r, words):
     return r, its.count_valid(r)
 
 
-@partial(jax.jit, static_argnames=("algo", "backend"))
-def _fold_program(r, folds, fold_active, algo: str, backend: str):
-    if backend == "pallas":
-        return _fold_pallas(r, folds, fold_active)
-    return its.svs_fold_batch(r, folds, algo=algo, fold_active=fold_active)
-
-
-@partial(jax.jit, static_argnames=("algo", "backend"))
-def _fold_probe_program(r, folds, fold_active, words, algo: str,
-                        backend: str):
-    if backend == "pallas":
-        r, _ = _fold_pallas(r, folds, fold_active)
-    else:
-        r, _ = its.svs_fold_batch(r, folds, algo=algo,
-                                  fold_active=fold_active)
-    return _probe_scan(r, words)
+@partial(jax.jit, static_argnames=("algo", "backend", "mode", "block_rows"))
+def _svs_program(r, folds, fold_active, pk, pk_active, words, algo: str,
+                 backend: str, mode: str, block_rows: int):
+    """One device program per group chunk: decoded folds → packed folds →
+    bitmap probes, candidates staying on device throughout.  ``pk`` is the
+    tuple of stacked batch-uniform packed operands (or None); ``words`` the
+    stacked bitmap rows (or None)."""
+    if folds.shape[0]:
+        if backend == "pallas":
+            r, _ = _fold_pallas(r, folds, fold_active)
+        else:
+            r, _ = its.svs_fold_batch(r, folds, algo=algo,
+                                      fold_active=fold_active)
+    if pk is not None:
+        if backend == "pallas":
+            from repro.kernels import ops as kernel_ops
+            packed_fn = kernel_ops.intersect_packed_batch
+        else:
+            packed_fn = its.intersect_packed_batch
+        r, _ = its.masked_svs_scan(
+            r, pk, pk_active,
+            lambda rr, op: packed_fn(rr, *op, mode=mode,
+                                     block_rows=block_rows))
+    if words is not None:
+        r, _ = _probe_scan(r, words)
+    return r, its.count_valid(r)
 
 
 @jax.jit
@@ -184,8 +257,38 @@ def _bitmap_and_program(words):
     return out, counts
 
 
+def _stack_packed(key: GroupKey, items: list[_Item], Bp: int):
+    """Stack the per-item packed layouts into uniform (Jp, Bp, ...) device
+    operands.  Inactive (j, b) slots keep all-pad block ids (→ all-SENTINEL
+    decode) and are additionally masked by the active flags."""
+    k_pad, t_pad, c_pad, e_pad, rows, _ = key.packed
+    Jp = max(len(it.psrc) for it in items)
+    PW = np.zeros((Jp, Bp, t_pad, 128), np.uint32)
+    PWid = np.zeros((Jp, Bp, k_pad), np.int32)
+    POf = np.zeros((Jp, Bp, k_pad), np.int32)
+    PMx = np.zeros((Jp, Bp, k_pad), np.uint32)
+    PBk = np.full((Jp, Bp, c_pad), k_pad, np.int32)
+    PEp = np.full((Jp, Bp, e_pad), -1, np.int32)
+    PEa = np.zeros((Jp, Bp, e_pad), np.uint32)
+    active = np.zeros((Jp, Bp), bool)
+    for b, it in enumerate(items):
+        for j, (lay, blk_p) in enumerate(it.psrc):
+            PW[j, b] = lay.words
+            PWid[j, b] = lay.widths
+            POf[j, b] = lay.offsets
+            PMx[j, b] = lay.maxes
+            PBk[j, b] = blk_p
+            if e_pad:
+                PEp[j, b] = lay.exc_pos
+                PEa[j, b] = lay.exc_add
+            active[j, b] = True
+    pk = tuple(jnp.asarray(x) for x in (PW, PWid, POf, PMx, PBk, PEp, PEa))
+    return pk, jnp.asarray(active)
+
+
 def _run_svs_group(key: GroupKey, items: list[_Item], backend: str):
-    """One device program: stacked folds + bitmap probes for `items`.
+    """One device program: stacked decoded folds + packed folds + bitmap
+    probes for `items`.
 
     The batch dimension is bucketed to a power of two (sentinel-padded rows,
     results sliced back) so the jit/compile count stays bounded by the
@@ -207,17 +310,22 @@ def _run_svs_group(key: GroupKey, items: list[_Item], backend: str):
             F[j, b] = fold
             active[j, b] = True
     F, active = jnp.asarray(F), jnp.asarray(active)             # (J, Bp, N)
+    pk = pk_active = None
+    mode, rows = "d1", 32
+    if key.packed is not None:
+        pk, pk_active = _stack_packed(key, items, Bp)
+        rows, mode = key.packed[4], key.packed[5]
+    W = None
     if Jb:
         # inactive slots are all-ones rows — the probe identity
-        W = np.full((Jb, Bp, key.words), 0xFFFFFFFF, dtype=np.uint32)
+        Wnp = np.full((Jb, Bp, key.words), 0xFFFFFFFF, dtype=np.uint32)
         for b, it in enumerate(items):
             if it.bm_words is not None:
                 for j in range(it.bm_words.shape[0]):
-                    W[j, b] = it.bm_words[j]
-        R, counts = _fold_probe_program(R, F, active, jnp.asarray(W),
-                                        key.algo, backend)
-    else:
-        R, counts = _fold_program(R, F, active, key.algo, backend)
+                    Wnp[j, b] = it.bm_words[j]
+        W = jnp.asarray(Wnp)
+    R, counts = _svs_program(R, F, active, pk, pk_active, W,
+                             key.algo, backend, mode, rows)
     vals = np.asarray(R)
     cnts = np.asarray(counts)
     return [(vals[b, : cnts[b]], int(cnts[b])) for b in range(B)]
@@ -251,6 +359,13 @@ def _chunk_size(key: GroupKey, items: list[_Item],
         Jb = max(it.bm_words.shape[0] if it.bm_words is not None else 0
                  for it in items)
         per_item = J * key.n_bucket + key.m_bucket + Jb * key.words
+        if key.packed is not None:
+            k_pad, t_pad, c_pad, e_pad, rows, _ = key.packed
+            Jp = max(len(it.psrc) for it in items)
+            # compressed words + per-block metadata + the partial decode
+            # buffer the program materializes (c_pad blocks of rows×128)
+            per_item += Jp * (t_pad * 128 + 3 * k_pad + c_pad
+                              + 2 * e_pad + c_pad * rows * 128)
     return max(1, min(max_group_size, GROUP_INT_BUDGET // max(per_item, 1)))
 
 
@@ -261,15 +376,19 @@ def _chunk_size(key: GroupKey, items: list[_Item],
 def execute_batch(index: HybridIndex, queries: list[list[int]], *,
                   backend: str = "jax", max_results: int = 1 << 16,
                   max_group_size: int = MAX_GROUP_SIZE, cache=None,
+                  skip: bool = True,
                   stats: dict | None = None) -> list[QueryResult]:
     """Answer a batch of conjunctive queries; results are element-for-element
     identical to ``engine.query`` run per query.
 
     backend: 'jax' (searchsorted/tile-merge) or 'pallas' (galloping kernel).
-    stats: optional dict, filled with scheduler counters for introspection.
+    skip: False forces full decode of every fold list (the pre-skip
+    behavior, kept for A/B benchmarking of the partial-decode win).
+    stats: optional dict, filled with scheduler counters (n_groups,
+    n_programs, n_items, decoded_ints, skip_folds) for introspection.
     """
     assert backend in ("jax", "pallas"), backend
-    groups = schedule(index, queries, cache=cache)
+    groups = schedule(index, queries, cache=cache, skip=skip, stats=stats)
     per_query: list[list[tuple[int, np.ndarray]]] = [[] for _ in queries]
     counts = [0] * len(queries)
     n_programs = 0
@@ -288,8 +407,11 @@ def execute_batch(index: HybridIndex, queries: list[list[int]], *,
                     per_query[it.qi].append(
                         (it.pi, docs.astype(np.int64) + it.doc_lo))
     if stats is not None:
-        stats.update(n_groups=len(groups), n_programs=n_programs,
-                     n_items=sum(len(v) for v in groups.values()))
+        # accumulate (like the decoded_ints/skip_folds counters) so one
+        # stats dict can span a chunked run of many execute_batch calls
+        for k, v in (("n_groups", len(groups)), ("n_programs", n_programs),
+                     ("n_items", sum(len(v) for v in groups.values()))):
+            stats[k] = stats.get(k, 0) + v
     out = []
     for qi in range(len(queries)):
         chunks = [d for _, d in sorted(per_query[qi], key=lambda x: x[0])]

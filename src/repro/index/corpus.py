@@ -39,29 +39,55 @@ class Corpus:
 
 
 def synthesize(n_docs: int = 1 << 20, n_queries: int = 200,
-               seed: int = 0, table=TABLE2_CLUEWEB) -> Corpus:
-    """Build posting lists + queries scaled from the paper's Table 2."""
+               seed: int = 0, table=TABLE2_CLUEWEB,
+               shared_vocab: bool = False, zipf_s: float = 1.1,
+               vocab_per_bucket: int = 6) -> Corpus:
+    """Build posting lists + queries scaled from the paper's Table 2.
+
+    shared_vocab=False keeps the original behavior: every query position
+    mints a fresh term id, so a DecodeCache only helps across exact query
+    repeats.  shared_vocab=True draws term ids from a shared vocabulary
+    instead: per length bucket (~pow2 of the target posting count) at most
+    ``vocab_per_bucket`` terms exist, and repeat picks follow a Zipf(s)
+    rank distribution over the bucket — the head-heavy term reuse real
+    query logs show, which is what gives the DecodeCache a realistic hit
+    rate (ROADMAP: cross-query decode reuse).
+    """
     rng = np.random.default_rng(seed)
     scale = n_docs / TABLE2_DOCS
     universe_bits = int(np.ceil(np.log2(n_docs)))
 
     # desired per-position lengths (thousands → docs, scaled)
-    counts = np.array([c for _, (_, lens) in table.items() for c in lens])
     term_sizes: list[int] = []
     queries: list[list[int]] = []
     probs = np.array([p for _, (p, _) in table.items()])
     probs = probs / probs.sum()
     n_terms_options = list(table.keys())
+    vocab: dict[int, list[int]] = {}        # length bucket → term ids
     for _ in range(n_queries):
         k = int(rng.choice(n_terms_options, p=probs))
         lens = table[k][1]
-        tids = []
+        tids: list[int] = []
         for ln in lens:
             target = max(int(ln * 1000 * scale *
                              float(np.exp(rng.normal(0, 0.35)))), 4)
             target = min(target, n_docs - 1)
-            tids.append(len(term_sizes))
-            term_sizes.append(target)
+            if not shared_vocab:
+                tids.append(len(term_sizes))
+                term_sizes.append(target)
+                continue
+            bucket = vocab.setdefault(int(np.log2(target)), [])
+            pool = [t for t in bucket if t not in tids]
+            if len(bucket) < vocab_per_bucket or not pool:
+                tid = len(term_sizes)
+                term_sizes.append(target)
+                bucket.append(tid)
+            else:
+                # Zipf over creation rank: early terms are the hot head
+                w = np.array([1.0 / (i + 1) ** zipf_s
+                              for i, t in enumerate(bucket) if t in pool])
+                tid = pool[int(rng.choice(len(pool), p=w / w.sum()))]
+            tids.append(tid)
         queries.append(tids)
 
     postings = [clusterdata(rng, sz, universe_bits) for sz in term_sizes]

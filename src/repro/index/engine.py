@@ -29,50 +29,68 @@ the standard shape-bucketing pattern of real JAX serving systems.
 from __future__ import annotations
 
 import dataclasses
+import os
+from collections import OrderedDict
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import bitmap as bm
-from repro.core import bitpack
 from repro.core import codecs as codec_lib
 from repro.core import intersect as its
+from repro.index import source
 from repro.index.builder import HybridIndex, IndexPart
 
-USE_KERNELS = False     # route big-ratio intersects through the Pallas kernel
+# route big-ratio intersects through the Pallas kernels; the
+# REPRO_USE_KERNELS=1 env form is what CI's kernel-backend job flips so the
+# whole sequential engine suite runs through the Pallas paths
+USE_KERNELS = os.environ.get("REPRO_USE_KERNELS", "0") == "1"
 
 
 class DecodeCache:
     """LRU cache of decoded (padded) posting lists — the paper's Table 4
     regime: SvS over *uncompressed* lists.  Real engines decode hot lists
     once, not per query; capacity bounds working-set memory like the paper's
-    L3-sized partitions bound theirs."""
+    L3-sized partitions bound theirs.
+
+    The store is an OrderedDict in recency order — get/put are O(1)
+    ``move_to_end`` and eviction pops from the cold end (the old
+    implementation re-scanned every key with ``min()`` per eviction, O(n²)
+    across an eviction burst).  ``hits``/``misses`` drive the hit-rate
+    figure serve.py reports."""
 
     def __init__(self, capacity_ints: int = 1 << 24):
         self.capacity = capacity_ints
-        self._store: dict[int, tuple] = {}
+        self._store: OrderedDict = OrderedDict()
         self._size = 0
-        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, key) -> bool:
+        return key in self._store        # residency peek: no counter, no LRU
 
     def get(self, key):
         hit = self._store.get(key)
         if hit is None:
+            self.misses += 1
             return None
-        self._tick += 1
-        self._store[key] = (hit[0], hit[1], self._tick)
-        return hit[0], hit[1]
+        self.hits += 1
+        self._store.move_to_end(key)
+        return hit
 
     def put(self, key, vals, n):
-        old = self._store.get(key)
+        old = self._store.pop(key, None)
         if old is not None:
             self._size -= int(old[0].shape[0])
         self._size += int(vals.shape[0])
-        self._tick += 1
-        self._store[key] = (vals, n, self._tick)
+        self._store[key] = (vals, n)
         while self._size > self.capacity and len(self._store) > 1:
-            oldest = min(self._store, key=lambda k: self._store[k][2])
-            self._size -= int(self._store[oldest][0].shape[0])
-            del self._store[oldest]
+            _, (old_vals, _) = self._store.popitem(last=False)
+            self._size -= int(old_vals.shape[0])
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
 
 
 @dataclasses.dataclass
@@ -81,39 +99,38 @@ class QueryResult:
     docs: np.ndarray        # global doc ids (may be truncated to cap)
 
 
-def _decode_padded(codec, tp) -> tuple[jnp.ndarray, int]:
-    from repro.core import varint as varint_lib
-    if isinstance(tp.payload, bitpack.PackedList):
-        vals = np.asarray(bitpack.decode_bucketed(tp.payload))[: tp.n]
-        vals = vals.astype(np.int32)
-    elif isinstance(tp.payload, varint_lib.VarintList):
-        vals = varint_lib.decode(tp.payload).astype(np.int32)   # tail codec
-    else:
-        vals = np.asarray(codec.decode(tp.payload))[: tp.n].astype(np.int32)
-    size = its.pow2_bucket(tp.n)
-    return jnp.asarray(its.pad_to(vals, size)), tp.n
-
-
-def decode_term(part: IndexPart, tid: int, tp, codec, cache=None):
-    """Decode one term's posting list to (padded int32 vals, count), going
-    through the DecodeCache when one is supplied.  Shared by the sequential
-    path below and the batched scheduler in ``repro.index.batch``."""
-    if cache is not None:
-        hit = cache.get((part.uid, tid))
-        if hit is not None:
-            return hit
-    out = _decode_padded(codec, tp)
-    if cache is not None:
-        cache.put((part.uid, tid), out[0], out[1])
-    return out
+def _packed_probe(r, r_count: int, src: source.PackedSource,
+                  stats: dict | None = None):
+    """Skip-probe the current candidates against a PackedSource: host-side
+    block-max search picks the candidate blocks, the device decodes only
+    those (``intersect_packed_candidates`` or the fused Pallas kernel).
+    The padded device operands are memoized per (part, term) — only the
+    per-query candidate block ids move host→device here."""
+    blk = src.candidate_block_ids(np.asarray(r)[:r_count])
+    k_pad = its.pow2_bucket(src.num_blocks, floor=1)
+    t_pad = its.pow2_bucket(src.num_rows, floor=1)
+    e_pad = (its.pow2_bucket(src.num_exceptions, floor=1)
+             if src.num_exceptions else 0)
+    c_pad = its.pow2_bucket(len(blk), floor=source.CAND_FLOOR)
+    words, widths, offsets, maxes, exc_pos, exc_add = \
+        source.cached_layout_dev(src, (k_pad, t_pad, e_pad))
+    blk_p = jnp.asarray(source.pad_block_ids(blk, c_pad, k_pad))
+    source._bump(stats, "decoded_ints", c_pad * src.block_rows * 128)
+    source._bump(stats, "skip_folds")
+    args = (words, widths, offsets, maxes, blk_p, exc_pos, exc_add)
+    if USE_KERNELS:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.intersect_packed_batch(
+            r[None], *(a[None] for a in args),
+            mode=src.mode, block_rows=src.block_rows)[0]
+    return its.intersect_packed_candidates(
+        r, *args, mode=src.mode, block_rows=src.block_rows)
 
 
 def _intersect_part(part: IndexPart, term_ids: list[int], codec,
-                    use_packed_gallop: bool = True, cache=None):
+                    skip: bool = True, cache=None,
+                    stats: dict | None = None):
     """Returns (padded candidate vals, count) or ('bitmap', words)."""
-    def decode(tid, tp):
-        return decode_term(part, tid, tp, codec, cache=cache)
-
     tps = [part.terms[t] for t in term_ids]
     if any(tp.kind == "empty" for tp in tps):
         return None, 0
@@ -128,24 +145,24 @@ def _intersect_part(part: IndexPart, term_ids: list[int], codec,
         return ("bitmap", words), int(bm.popcount(jnp.asarray(words)))
 
     id_of = {id(tp): t for t, tp in zip(term_ids, tps)}
-    r, r_count = decode(id_of[id(lists[0])], lists[0])
+    # the shortest list seeds the candidate buffer — always decoded
+    seed = source.resolve(part, id_of[id(lists[0])], lists[0], codec,
+                          cache=cache, r_count=None, stats=stats)
+    r, r_count = seed.vals, seed.n
     for tp in lists[1:]:
         if r_count == 0:
             break
-        ratio = tp.n / max(r_count, 1)
-        if (cache is None and use_packed_gallop
-                and isinstance(tp.payload, bitpack.PackedList)
-                and ratio > its.TILED_MAX_RATIO):
+        src = source.resolve(part, id_of[id(tp)], tp, codec, cache=cache,
+                             r_count=r_count, skip=skip, stats=stats)
+        if isinstance(src, source.PackedSource):
             # paper's galloping+skip: search the block-max index, decode only
             # candidate blocks — the long list is never fully decoded.
-            mask = its.intersect_packed(r, tp.payload)
-        elif USE_KERNELS and ratio > its.TILED_MAX_RATIO:
+            mask = _packed_probe(r, r_count, src, stats=stats)
+        elif USE_KERNELS and tp.n / max(r_count, 1) > its.TILED_MAX_RATIO:
             from repro.kernels import ops as kernel_ops
-            f, _ = decode(id_of[id(tp)], tp)
-            mask = kernel_ops.intersect_gallop(r, f)
+            mask = kernel_ops.intersect_gallop(r, src.vals)
         else:
-            f, _ = decode(id_of[id(tp)], tp)
-            mask = its.intersect_auto(r, f, r_count, tp.n)
+            mask = its.intersect_auto(r, src.vals, r_count, tp.n)
         r, cnt = its.compact(r, mask)
         r_count = int(cnt)
     for tp in bitmaps:
@@ -158,15 +175,19 @@ def _intersect_part(part: IndexPart, term_ids: list[int], codec,
 
 
 def query(index: HybridIndex, term_ids: list[int],
-          max_results: int = 1 << 16, cache: "DecodeCache | None" = None
-          ) -> QueryResult:
+          max_results: int = 1 << 16, cache: "DecodeCache | None" = None,
+          skip: bool = True, stats: dict | None = None) -> QueryResult:
     """cache: optional DecodeCache → the paper's Table 4 regime (SvS over
-    already-decoded lists); None → Table 5 regime (decode per query)."""
+    already-decoded lists); None → Table 5 regime (decode per query).
+    Either way long skip-capable lists go through the packed skip path
+    (``skip=False`` forces full decode everywhere, for A/B benchmarks).
+    stats: optional dict accumulating decoded_ints / skip_folds counters."""
     codec = codec_lib.get_codec(index.codec_name)
     total = 0
     out_docs = []
     for part in index.parts:
-        res, cnt = _intersect_part(part, term_ids, codec, cache=cache)
+        res, cnt = _intersect_part(part, term_ids, codec, skip=skip,
+                                   cache=cache, stats=stats)
         total += cnt
         if cnt and res is not None:
             kind, payload = res

@@ -1,0 +1,212 @@
+"""Posting-source layer: one decode/skip policy for both engines
+(DESIGN.md §2.6).
+
+A query term resolves to one of two *sources*:
+
+  DecodedSource — the padded int32 value array (today's behavior): short
+                  lists, cache-resident lists, and codecs without a skip
+                  index all land here.
+  PackedSource  — the compressed list stays packed; intersection gallops
+                  over the block-max skip index and decodes only candidate
+                  blocks (paper §6.5).  Long skip-capable lists land here.
+
+The choice is made by ``resolve`` from three inputs — the candidate/list
+cardinality ratio, the codec family (``bitpack.skip_capable``), and cache
+residency — replacing the two divergent inline heuristics the sequential
+and batched engines used to carry.  Crucially the skip path *composes* with
+the DecodeCache instead of being mutually exclusive with it: short lists
+are decoded once and cached, long lists are skip-probed and never pollute
+the cache (their decode cost is exactly what the skip index avoids).
+
+``resolve`` also keeps the decoded-ints accounting (``stats`` dict) that
+serve.py and bench_engine.py report: every integer materialized from a
+compressed payload is counted, so the partial-decode win is visible as a
+number, not a belief.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core import intersect as its
+from repro.core import varint as varint_lib
+
+# Ratio above which a skip-capable list is probed packed instead of decoded
+# (the paper's galloping threshold, re-derived on TPU tile geometry — same
+# constant the decoded-path dispatcher uses).
+SKIP_MIN_RATIO = its.TILED_MAX_RATIO
+# Below this many blocks the skip index cannot prune anything worth the
+# extra program: decode instead.
+SKIP_MIN_BLOCKS = 4
+
+# Bucket floor for the candidate-block-id buffer (pow2-bucketed like every
+# other device shape).
+CAND_FLOOR = 8
+
+
+@dataclasses.dataclass
+class DecodedSource:
+    """Fully decoded posting list: padded int32 values + valid count."""
+    vals: jnp.ndarray
+    n: int
+
+
+@dataclasses.dataclass
+class PackedSource:
+    """Compressed posting list kept packed for skip-aware partial decode."""
+    payload: object            # PackedList | PatchedList
+    n: int
+    maxes_np: np.ndarray       # host copy of the block-max skip index
+    key: tuple = ()            # (part.uid, tid) — layout memoization key
+
+    @property
+    def mode(self) -> str:
+        return self.payload.mode
+
+    @property
+    def block_rows(self) -> int:
+        return self.payload.block_rows
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.payload.widths.shape[0])
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.payload.flat_words.shape[0])
+
+    @property
+    def num_exceptions(self) -> int:
+        return int(getattr(self.payload, "exc_pos",
+                           np.zeros(0)).shape[0])
+
+    def candidate_block_ids(self, values: np.ndarray) -> np.ndarray:
+        """Unique block ids possibly containing any candidate value."""
+        return bitpack.candidate_block_ids(self.maxes_np, values)
+
+    def layout(self, k_pad: int, t_pad: int, e_pad: int) -> bitpack.PackedLayout:
+        return bitpack.layout_np(self.payload, k_pad, t_pad, e_pad)
+
+
+def pad_block_ids(blk: np.ndarray, c_pad: int, k_pad: int) -> np.ndarray:
+    """Pad a candidate block-id list to the group bucket; pad entries use the
+    out-of-range id ``k_pad`` which the device decodes to all-SENTINEL."""
+    out = np.full(c_pad, k_pad, np.int32)
+    out[: blk.shape[0]] = blk
+    return out
+
+
+# Memoized padded layouts: building a PackedLayout copies the compressed
+# words off device and re-pads them, and the sequential probe re-uploads
+# the result — per query, per fold, for lists that by definition recur
+# (they are the long head terms).  Keyed by ((part.uid, tid), pads) so
+# index rebuilds can't serve stale entries; LRU-bounded by total layout
+# ints (like the DecodeCache), since each entry pins a whole compressed
+# list.
+_LAYOUT_CACHE: OrderedDict = OrderedDict()
+_LAYOUT_CACHE_BUDGET = 1 << 26      # total ints across cached layouts
+_layout_cache_size = 0
+
+
+def _layout_ints(pads: tuple) -> int:
+    k_pad, t_pad, e_pad = pads
+    return t_pad * bitpack.LANES + 3 * k_pad + 2 * e_pad
+
+
+def _layout_entry(src: PackedSource, pads: tuple):
+    global _layout_cache_size
+    key = (src.key, pads)
+    entry = _LAYOUT_CACHE.get(key)
+    if entry is None:
+        entry = {"np": src.layout(*pads), "dev": None}
+        _LAYOUT_CACHE[key] = entry
+        _layout_cache_size += _layout_ints(pads)
+        while (_layout_cache_size > _LAYOUT_CACHE_BUDGET
+               and len(_LAYOUT_CACHE) > 1):
+            (_, old_pads), _ = _LAYOUT_CACHE.popitem(last=False)
+            _layout_cache_size -= _layout_ints(old_pads)
+    else:
+        _LAYOUT_CACHE.move_to_end(key)
+    return entry
+
+
+def cached_layout_np(src: PackedSource, pads: tuple) -> bitpack.PackedLayout:
+    """Memoized host-side padded layout (batch scheduler stacking)."""
+    return _layout_entry(src, pads)["np"]
+
+
+def cached_layout_dev(src: PackedSource, pads: tuple) -> tuple:
+    """Memoized device-resident layout operands (sequential probe):
+    (words, widths, offsets, maxes, exc_pos, exc_add) jnp arrays."""
+    entry = _layout_entry(src, pads)
+    if entry["dev"] is None:
+        lay = entry["np"]
+        entry["dev"] = (jnp.asarray(lay.words), jnp.asarray(lay.widths),
+                        jnp.asarray(lay.offsets), jnp.asarray(lay.maxes),
+                        jnp.asarray(lay.exc_pos), jnp.asarray(lay.exc_add))
+    return entry["dev"]
+
+
+def decoded_ints_of(payload) -> int:
+    """Integers materialized by a full decode of this payload."""
+    if isinstance(payload, varint_lib.VarintList):
+        return payload.n
+    if bitpack.skip_capable(payload):
+        return int(payload.widths.shape[0]) * payload.block_rows * bitpack.LANES
+    return payload.n
+
+
+def decode_padded(codec, tp) -> tuple[jnp.ndarray, int]:
+    """Decode one term posting to (pow2-padded int32 vals, count)."""
+    if isinstance(tp.payload, bitpack.PackedList):
+        vals = np.asarray(bitpack.decode_bucketed(tp.payload))[: tp.n]
+        vals = vals.astype(np.int32)
+    elif isinstance(tp.payload, varint_lib.VarintList):
+        vals = varint_lib.decode(tp.payload).astype(np.int32)   # tail codec
+    else:
+        vals = np.asarray(codec.decode(tp.payload))[: tp.n].astype(np.int32)
+    size = its.pow2_bucket(tp.n)
+    return jnp.asarray(its.pad_to(vals, size)), tp.n
+
+
+def _bump(stats, key, by=1):
+    if stats is not None:
+        stats[key] = stats.get(key, 0) + by
+
+
+def resolve(part, tid: int, tp, codec, cache=None, r_count: int | None = None,
+            skip: bool = True, stats: dict | None = None):
+    """Resolve one term posting to a DecodedSource or a PackedSource.
+
+    r_count: current (or scheduled) candidate cardinality — None means this
+    term *is* the candidate seed and must decode.  skip=False forces the
+    decoded path everywhere (the pre-skip engine behavior, kept for A/B
+    benchmarking).
+    """
+    key = (part.uid, tid)
+    want_skip = (skip and r_count is not None
+                 and bitpack.skip_capable(tp.payload)
+                 and tp.n / max(r_count, 1) > SKIP_MIN_RATIO
+                 and int(tp.payload.widths.shape[0]) >= SKIP_MIN_BLOCKS)
+    if want_skip:
+        # cache residency wins: an already-decoded list is free to reuse
+        if cache is not None and key in cache:
+            vals, n = cache.get(key)
+            return DecodedSource(vals, n)
+        return PackedSource(tp.payload, tp.n,
+                            maxes_np=np.asarray(tp.payload.maxes), key=key)
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None:
+            return DecodedSource(hit[0], hit[1])
+    vals, n = decode_padded(codec, tp)
+    _bump(stats, "decoded_ints", decoded_ints_of(tp.payload))
+    _bump(stats, "decoded_lists")
+    if cache is not None:
+        cache.put(key, vals, n)
+    return DecodedSource(vals, n)

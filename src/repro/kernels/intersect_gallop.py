@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import bitpack as core_bitpack
+from repro.core import deltas as core_deltas
+
 TILE_R = 128
 SENTINEL = np.int32(2**31 - 1)
 
@@ -103,3 +106,90 @@ def gallop_tiles_batched(r, f, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((B, M), jnp.bool_),
         interpret=interpret,
     )(r.astype(jnp.int32), f.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# packed gallop: skip-aware partial decode fused with the search
+# --------------------------------------------------------------------------
+#
+# The batched engine never materializes a long compressed list: per batch row
+# the kernel holds the *compressed* words plus per-block metadata in VMEM,
+# gather-decodes only the (host-precomputed, deduplicated) candidate blocks,
+# and binary-searches the whole candidate tile against the partially decoded
+# buffer — decode volume is C·block ints, not the list length (paper §6.5).
+# One grid step per batch row: the decode is done once and all M candidate
+# lanes search it in the same step.
+
+def make_packed_gallop_kernel(mode: str, block_rows: int, n_exc: int):
+    per = block_rows * core_bitpack.LANES
+
+    def kernel(r_ref, w_ref, wid_ref, off_ref, max_ref, blk_ref,
+               ep_ref, ea_ref, out_ref):
+        r = r_ref[0]                                  # (M,) int32
+        words = w_ref[0]                              # (Tp, 128) uint32
+        widths, offsets = wid_ref[0], off_ref[0]      # (Kp,)
+        maxes = max_ref[0]                            # (Kp,) uint32
+        blk = blk_ref[0]                              # (C,) int32
+        Kp = maxes.shape[0]
+        C = blk.shape[0]
+        pad = blk >= Kp
+        ids = jnp.minimum(blk, Kp - 1)
+        seeds = jnp.where(ids > 0,
+                          jnp.take(maxes, jnp.maximum(ids - 1, 0)),
+                          jnp.uint32(0))
+        d = core_bitpack.unpack_deltas(words, jnp.take(widths, ids),
+                                       jnp.take(offsets, ids), block_rows)
+        if n_exc:
+            ep, ea = ep_ref[0], ea_ref[0]             # (E,)
+            eb = ep // per
+            slot = jnp.clip(jnp.searchsorted(blk, eb), 0, C - 1)
+            ok = (ep >= 0) & (jnp.take(blk, slot) == eb)
+            tgt = jnp.where(ok, slot * per + ep % per, C * per)
+            d = d.reshape(-1).at[tgt].add(ea, mode="drop").reshape(d.shape)
+        vals = core_deltas.prefix_sum(d, seeds, mode)
+        flat = vals.reshape(-1).astype(jnp.int32)     # (C·per,) sorted
+        flat = jnp.where(jnp.repeat(pad, per), SENTINEL, flat)
+        log2f = int(np.log2(C * per))
+        out_ref[0] = _gallop_body(r, flat, log2f)
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("mode", "block_rows", "interpret"))
+def packed_gallop_batched(r, words, widths, offsets, maxes, blk_ids,
+                          exc_pos, exc_add, mode: str, block_rows: int,
+                          interpret: bool = True):
+    """Batched skip-aware packed gallop.  r (B, M) sentinel-padded int32;
+    words (B, Tp, 128) uint32; widths/offsets/maxes (B, Kp); blk_ids (B, C)
+    with C·block_rows·128 a power of two; exc_pos/exc_add (B, E) FastPFOR
+    patches (-1-padded).  Returns (B, M) bool match mask."""
+    B, M = r.shape
+    _, C = blk_ids.shape
+    E = exc_pos.shape[-1]
+    per = block_rows * core_bitpack.LANES
+    assert (C * per) & (C * per - 1) == 0, "C·per must be a power of two"
+    Tp, Kp = words.shape[1], widths.shape[1]
+    row = lambda b: (b, 0)
+    row3 = lambda b: (b, 0, 0)
+    grid_spec = pl.GridSpec(
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, M), row),
+            pl.BlockSpec((1, Tp, core_bitpack.LANES), row3),
+            pl.BlockSpec((1, Kp), row),
+            pl.BlockSpec((1, Kp), row),
+            pl.BlockSpec((1, Kp), row),
+            pl.BlockSpec((1, C), row),
+            pl.BlockSpec((1, max(E, 1)), row),
+            pl.BlockSpec((1, max(E, 1)), row),
+        ],
+        out_specs=pl.BlockSpec((1, M), row),
+    )
+    ep = exc_pos if E else jnp.full((B, 1), -1, jnp.int32)
+    ea = exc_add if E else jnp.zeros((B, 1), jnp.uint32)
+    return pl.pallas_call(
+        make_packed_gallop_kernel(mode, block_rows, E),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.bool_),
+        interpret=interpret,
+    )(r.astype(jnp.int32), words, widths.astype(jnp.int32),
+      offsets.astype(jnp.int32), maxes, blk_ids.astype(jnp.int32), ep, ea)

@@ -123,3 +123,22 @@ def intersect_gallop_batch(r, f):
         from repro.core import intersect as core_intersect
         return core_intersect.intersect_gallop_batch(r, f)
     return _intersect_gallop.gallop_tiles_batched(r, f, interpret=INTERPRET)
+
+
+def intersect_packed_batch(r, words, widths, offsets, maxes, blk_ids,
+                           exc_pos, exc_add, mode: str, block_rows: int):
+    """Kernel-path batched packed gallop: decode only the candidate blocks of
+    each row's compressed list in VMEM, then binary-search the candidates
+    against the partially decoded buffer (one fused kernel; DESIGN.md §2.6).
+    Falls back to the jnp path when the decoded candidate buffer plus the
+    VMEM-resident compressed words would not fit the VMEM budget."""
+    per = block_rows * LANES
+    resident = blk_ids.shape[-1] * per + words.shape[-2] * LANES
+    if resident > GALLOP_VMEM_CAP:
+        from repro.core import intersect as core_intersect
+        return core_intersect.intersect_packed_batch(
+            r, words, widths, offsets, maxes, blk_ids, exc_pos, exc_add,
+            mode=mode, block_rows=block_rows)
+    return _intersect_gallop.packed_gallop_batched(
+        r, words, widths, offsets, maxes, blk_ids, exc_pos, exc_add,
+        mode=mode, block_rows=block_rows, interpret=INTERPRET)

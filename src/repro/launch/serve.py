@@ -9,7 +9,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch paper-index --queries 20
   PYTHONPATH=src python -m repro.launch.serve --arch paper-index \\
-      --queries 256 --batch 64 --backend jax
+      --queries 256 --batch 64 --backend jax --cache --shared-vocab
 """
 
 from __future__ import annotations
@@ -27,43 +27,57 @@ from repro.configs.base import get_config
 def serve_index(args):
     from repro.index import builder, corpus as corpus_lib, engine
     corpus = corpus_lib.synthesize(n_docs=1 << 16, n_queries=args.queries,
-                                   seed=5)
+                                   seed=5, shared_vocab=args.shared_vocab)
     idx = builder.build(corpus.postings, corpus.n_docs,
                         codec_name="fastpfor-d1", B=16, n_parts=2)
     queries = corpus.queries
+    cache = engine.DecodeCache() if args.cache else None
+
+    def cache_note():
+        if cache is None:
+            return ""
+        return f", cache hit rate {cache.hit_rate:.2f}"
+
     if args.batch > 1:
         from repro.index import batch as batch_lib
 
         def run_all():
-            out, n_programs = [], 0
+            out, stats = [], {}
             for lo in range(0, len(queries), args.batch):
-                stats: dict = {}
                 out.extend(batch_lib.execute_batch(
                     idx, queries[lo: lo + args.batch],
-                    backend=args.backend, stats=stats))
-                n_programs += stats["n_programs"]
-            return out, n_programs
+                    backend=args.backend, cache=cache, stats=stats))
+            return out, stats
 
         run_all()                               # warm / compile
         t0 = time.perf_counter()
-        results, n_programs = run_all()
+        results, stats = run_all()
         dt = time.perf_counter() - t0
         hits = sum(r.count for r in results)
         print(f"[serve] paper-index --batch {args.batch} ({args.backend}): "
               f"{len(queries)} queries, {len(queries) / dt:.1f} q/s "
               f"({dt / len(queries) * 1e3:.2f} ms/query), {hits} hits, "
-              f"{n_programs} device programs, "
-              f"{idx.stats()['bits_per_int']:.2f} bits/int")
+              f"{stats['n_programs']} device programs, "
+              f"{stats.get('decoded_ints', 0) / len(queries):.0f} "
+              f"decoded ints/query "
+              f"({stats.get('skip_folds', 0)} skip folds), "
+              f"{idx.stats()['bits_per_int']:.2f} bits/int"
+              f"{cache_note()}")
         return
     for q in queries:                       # warm / compile every signature
-        engine.query(idx, q)
+        engine.query(idx, q, cache=cache)
+    stats: dict = {}
     t0 = time.perf_counter()
-    hits = sum(engine.query(idx, q).count for q in queries)
+    hits = sum(engine.query(idx, q, cache=cache, stats=stats).count
+               for q in queries)
     dt = time.perf_counter() - t0
     print(f"[serve] paper-index: {len(queries)} queries, "
           f"{len(queries) / dt:.1f} q/s "
           f"({dt / len(queries) * 1e3:.2f} ms/query), {hits} hits, "
-          f"{idx.stats()['bits_per_int']:.2f} bits/int")
+          f"{stats.get('decoded_ints', 0) / len(queries):.0f} "
+          f"decoded ints/query ({stats.get('skip_folds', 0)} skip folds), "
+          f"{idx.stats()['bits_per_int']:.2f} bits/int"
+          f"{cache_note()}")
 
 
 def serve_lm(args, spec):
@@ -114,6 +128,12 @@ def main():
                     help="paper-index: >1 enables batched scheduler; "
                          "lm/recsys: batch size (default 4)")
     ap.add_argument("--backend", choices=["jax", "pallas"], default="jax")
+    ap.add_argument("--cache", action="store_true",
+                    help="paper-index: serve with a DecodeCache and report "
+                         "its hit rate")
+    ap.add_argument("--shared-vocab", action="store_true",
+                    help="paper-index: Zipf-shared query term ids "
+                         "(realistic cache hit rates)")
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
     if args.arch == "paper-index":

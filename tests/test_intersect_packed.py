@@ -1,0 +1,298 @@
+"""Skip-path coverage (ISSUE 2): the packed-gallop family against the
+scalar oracle across delta modes, plus the posting-source layer.
+
+Layers:
+  * ``intersect_packed`` / ``intersect_packed_candidates`` /
+    ``intersect_packed_batch`` vs ``intersect_ref`` across all delta modes,
+    empty results, all-match, and sentinel-padded candidate buffers,
+  * the FastPFOR exception patch inside the candidate-block decode,
+  * the fused Pallas packed-gallop kernel (interpret mode),
+  * engine-level composition: skip path + DecodeCache coexist, batched
+    skip on/off/backends return byte-identical results while decoding
+    ≥ 5× fewer ints on skewed-ratio queries,
+  * DecodeCache LRU order + hit counters, shared-vocab query logs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import bitpack, fastpfor
+from repro.core import intersect as its
+from repro.index import batch as batch_lib
+from repro.index import builder, corpus as corpus_lib, engine, source
+
+MODES = ["d1", "d2", "d4", "dm", "dv"]
+
+
+def _pair(rng, m, n, overlap=0.3, universe=2**22):
+    inter = np.sort(rng.choice(universe, size=max(int(m * overlap), 1),
+                               replace=False))
+    r = np.union1d(inter, rng.choice(universe, size=m, replace=False))
+    f = np.union1d(inter, rng.choice(universe, size=n, replace=False))
+    return r.astype(np.int64), f.astype(np.int64)
+
+
+def _layout_args(payload, r_values, c_floor=source.CAND_FLOOR):
+    """Host-side prep mirroring the source layer: buckets + candidate ids."""
+    k_pad = its.pow2_bucket(int(payload.widths.shape[0]), floor=1)
+    t_pad = its.pow2_bucket(int(payload.flat_words.shape[0]), floor=1)
+    E = int(getattr(payload, "exc_pos", np.zeros(0)).shape[0])
+    e_pad = its.pow2_bucket(E, floor=1) if E else 0
+    lay = bitpack.layout_np(payload, k_pad, t_pad, e_pad)
+    blk = bitpack.candidate_block_ids(np.asarray(payload.maxes), r_values)
+    c_pad = its.pow2_bucket(len(blk), floor=c_floor)
+    blk_p = source.pad_block_ids(blk, c_pad, k_pad)
+    return (jnp.asarray(lay.words), jnp.asarray(lay.widths),
+            jnp.asarray(lay.offsets), jnp.asarray(lay.maxes),
+            jnp.asarray(blk_p), jnp.asarray(lay.exc_pos),
+            jnp.asarray(lay.exc_add))
+
+
+def _run_candidates(r, payload, mode):
+    rp = jnp.asarray(its.pad_to(r, its.pow2_bucket(len(r))))
+    args = _layout_args(payload, r)
+    mask = its.intersect_packed_candidates(rp, *args, mode=mode,
+                                           block_rows=payload.block_rows)
+    vals, cnt = its.compact(rp, mask)
+    return np.asarray(vals)[: int(cnt)]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_packed_paths_match_oracle_all_modes(mode, rng):
+    r, f = _pair(rng, 250, 120000)
+    expect = its.intersect_ref(r, f)
+    pf = bitpack.encode(f, mode=mode)
+    rp = jnp.asarray(its.pad_to(r, its.pow2_bucket(len(r))))
+    mask = its.intersect_packed(rp, pf)                 # per-element gallop
+    vals, cnt = its.compact(rp, mask)
+    assert np.array_equal(np.asarray(vals)[: int(cnt)], expect)
+    assert np.array_equal(_run_candidates(r, pf, mode), expect)
+
+
+@pytest.mark.parametrize("mode", ["d1", "dv"])
+def test_packed_candidates_empty_and_all_match(mode, rng):
+    f = np.sort(rng.choice(2**22, size=60000, replace=False)).astype(np.int64)
+    pf = bitpack.encode(f, mode=mode)
+    # disjoint: odd values vs an even-only list
+    evens = 2 * np.sort(rng.choice(2**20, size=50000, replace=False))
+    pe = bitpack.encode(evens.astype(np.int64), mode=mode)
+    odd = evens[:300] + 1
+    assert _run_candidates(odd, pe, mode).size == 0
+    # all-match: candidates drawn from the list itself
+    sub = np.sort(rng.choice(f, size=200, replace=False))
+    assert np.array_equal(_run_candidates(sub, pf, mode), sub)
+
+
+def test_packed_candidates_sentinel_padding(rng):
+    """Sentinel-padded rows in the candidate buffer must never match, even
+    though padded layout slots also decode to SENTINEL."""
+    r, f = _pair(rng, 100, 80000)
+    pf = bitpack.encode(f, mode="d1")
+    rp = jnp.asarray(its.pad_to(r, 1024))               # heavy sentinel tail
+    args = _layout_args(pf, r)
+    mask = np.asarray(its.intersect_packed_candidates(
+        rp, *args, mode="d1", block_rows=pf.block_rows))
+    assert not mask[len(r):].any()
+    got = np.asarray(rp)[mask]
+    assert np.array_equal(np.sort(got), its.intersect_ref(r, f))
+
+
+def test_packed_candidates_fastpfor_exceptions(rng):
+    """Patched (exception-carrying) blocks decode correctly inside the
+    candidate-block gather."""
+    r, f = _pair(rng, 150, 150000, universe=2**26)
+    pf = fastpfor.encode(f, mode="d1")
+    assert int(pf.exc_pos.shape[0]) > 0                 # exceptions present
+    assert np.array_equal(_run_candidates(r, pf, "d1"),
+                          its.intersect_ref(r, f))
+
+
+@pytest.mark.parametrize("mode", ["d1", "dm"])
+def test_packed_batch_matches_oracle(mode, rng):
+    B = 4
+    f0 = np.sort(rng.choice(2**22, size=100000,
+                            replace=False)).astype(np.int64)
+    pf0 = bitpack.encode(f0, mode=mode)
+    k_pad = its.pow2_bucket(pf0.num_blocks, floor=1)
+    t_pad = its.pow2_bucket(int(pf0.flat_words.shape[0]), floor=1)
+    rows, args_rows, expects = [], [], []
+    for _ in range(B):
+        r, f = _pair(rng, 120, 100000)
+        pf = bitpack.encode(f, mode=mode)
+        lay = bitpack.layout_np(pf, k_pad, t_pad, 0)
+        blk = bitpack.candidate_block_ids(np.asarray(pf.maxes), r)
+        blk_p = source.pad_block_ids(blk, 256, k_pad)
+        rows.append(its.pad_to(r, 256))
+        args_rows.append((lay.words, lay.widths, lay.offsets, lay.maxes,
+                          blk_p, lay.exc_pos, lay.exc_add))
+        expects.append(its.intersect_ref(r, f))
+    R = jnp.asarray(np.stack(rows))
+    stacked = [jnp.asarray(np.stack([a[i] for a in args_rows]))
+               for i in range(7)]
+    mask = its.intersect_packed_batch(R, *stacked, mode=mode,
+                                      block_rows=pf0.block_rows)
+    vals, cnt = its.compact_batch(R, mask)
+    for b in range(B):
+        assert np.array_equal(np.asarray(vals)[b, : int(cnt[b])],
+                              expects[b])
+    # fused Pallas kernel (interpret mode): same mask
+    from repro.kernels import ops as kernel_ops
+    kmask = kernel_ops.intersect_packed_batch(
+        R, *stacked, mode=mode, block_rows=pf0.block_rows)
+    assert np.array_equal(np.asarray(kmask), np.asarray(mask))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31), st.integers(10, 500), st.integers(20000, 200000))
+def test_property_packed_candidates(seed, m, n):
+    rng = np.random.default_rng(seed)
+    r, f = _pair(rng, m, n)
+    pf = bitpack.encode(f, mode="d1")
+    assert np.array_equal(_run_candidates(r, pf, "d1"),
+                          np.intersect1d(r, f))
+
+
+# --------------------------------------------------------------------------
+# posting-source layer + engines
+# --------------------------------------------------------------------------
+
+def _skewed_corpus(seed=7, n_docs=1 << 17):
+    table = {2: (100.0, [1.6, 76000.0])}
+    return corpus_lib.synthesize(n_docs=n_docs, n_queries=6, seed=seed,
+                                 table=table)
+
+
+def test_engine_skip_composes_with_cache():
+    """Skip path and DecodeCache are no longer mutually exclusive: short
+    lists are cached, long lists are skip-probed (never cached), and the
+    results match the uncached/no-skip paths exactly."""
+    corpus = _skewed_corpus()
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="bp8-d1", B=0, n_parts=1)
+    cache = engine.DecodeCache(capacity_ints=1 << 26)
+    baseline = [engine.query(idx, q, skip=False) for q in corpus.queries]
+    for _ in range(2):
+        stats: dict = {}
+        got = [engine.query(idx, q, cache=cache, stats=stats)
+               for q in corpus.queries]
+        for a, b in zip(got, baseline):
+            assert a.count == b.count
+            assert np.array_equal(a.docs, b.docs)
+        assert stats.get("skip_folds", 0) > 0
+    # long lists never entered the cache: every entry is a short list
+    for vals, _ in cache._store.values():
+        assert vals.shape[0] <= 1024
+    assert cache.hits > 0
+
+
+def test_batched_skip_decodes_less_and_matches():
+    """ISSUE 2 acceptance: ≥5× fewer decoded ints on skewed-ratio queries,
+    batched results byte-identical to sequential on both backends."""
+    corpus = _skewed_corpus()
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="bp8-d1", B=0, n_parts=1)
+    seq = [engine.query(idx, q) for q in corpus.queries]
+    on, off = {}, {}
+    res_on = batch_lib.execute_batch(idx, corpus.queries, skip=True,
+                                     stats=on)
+    res_off = batch_lib.execute_batch(idx, corpus.queries, skip=False,
+                                      stats=off)
+    res_pl = batch_lib.execute_batch(idx, corpus.queries, backend="pallas")
+    for a, b, c, d in zip(res_on, res_off, res_pl, seq):
+        assert a.count == b.count == c.count == d.count
+        assert np.array_equal(a.docs, d.docs)
+        assert np.array_equal(b.docs, d.docs)
+        assert np.array_equal(c.docs, d.docs)
+    assert on["skip_folds"] > 0
+    assert off["decoded_ints"] >= 5 * on["decoded_ints"]
+
+
+def test_sequential_kernel_packed_path_matches():
+    corpus = _skewed_corpus(seed=9)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="bp8-d1", B=0, n_parts=1)
+    baseline = [engine.query(idx, q) for q in corpus.queries[:3]]
+    engine.USE_KERNELS = True
+    try:
+        kerneled = [engine.query(idx, q) for q in corpus.queries[:3]]
+    finally:
+        engine.USE_KERNELS = False
+    for a, b in zip(baseline, kerneled):
+        assert a.count == b.count
+        assert np.array_equal(a.docs, b.docs)
+
+
+def test_batched_mixed_decoded_and_packed_folds():
+    """Queries whose folds straddle the skip threshold exercise the
+    decoded-scan → packed-scan → probe composition in one program."""
+    table = {3: (100.0, [1.6, 40.0, 76000.0])}
+    corpus = corpus_lib.synthesize(n_docs=1 << 17, n_queries=6, seed=13,
+                                   table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="bp8-d1", B=64, n_parts=2)
+    res = batch_lib.execute_batch(idx, corpus.queries)
+    for q, br in zip(corpus.queries, res):
+        sr = engine.query(idx, q)
+        assert sr.count == br.count
+        assert np.array_equal(sr.docs, br.docs)
+        expect = engine.brute_force(corpus.postings, q)
+        assert sr.count == len(expect)
+
+
+# --------------------------------------------------------------------------
+# DecodeCache LRU + shared-vocab query logs
+# --------------------------------------------------------------------------
+
+def test_decode_cache_lru_eviction_order():
+    cache = engine.DecodeCache(capacity_ints=1000)
+    a, b, c = (jnp.zeros((400,), jnp.int32) for _ in range(3))
+    cache.put("a", a, 1)
+    cache.put("b", b, 1)
+    assert cache.get("a") is not None       # a is now most-recent
+    cache.put("c", c, 1)                    # evicts b (LRU), not a
+    assert "a" in cache and "c" in cache
+    assert "b" not in cache
+    assert cache.hits == 1 and cache.misses == 0
+
+
+def test_decode_cache_hit_counters():
+    cache = engine.DecodeCache()
+    v = jnp.zeros((64,), jnp.int32)
+    assert cache.get("x") is None
+    cache.put("x", v, 64)
+    assert cache.get("x") is not None
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert cache.hit_rate == 0.5
+    assert "x" in cache                     # __contains__ leaves counters
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_shared_vocab_reuses_terms():
+    plain = corpus_lib.synthesize(n_docs=1 << 12, n_queries=30, seed=3)
+    shared = corpus_lib.synthesize(n_docs=1 << 12, n_queries=30, seed=3,
+                                   shared_vocab=True)
+    assert len(plain.postings) == sum(len(q) for q in plain.queries)
+    n_slots = sum(len(q) for q in shared.queries)
+    assert len(shared.postings) < n_slots          # vocabulary is shared
+    seen, reused = set(), 0
+    for q in shared.queries:
+        assert len(set(q)) == len(q)               # no dupes inside a query
+        reused += sum(t in seen for t in q)
+        seen.update(q)
+    assert reused > 0
+
+
+def test_shared_vocab_engine_correct_and_cache_hits():
+    corpus = corpus_lib.synthesize(n_docs=1 << 13, n_queries=12, seed=5,
+                                   shared_vocab=True)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    cache = engine.DecodeCache(capacity_ints=1 << 24)
+    for q in corpus.queries:
+        got = engine.query(idx, q, cache=cache)
+        expect = engine.brute_force(corpus.postings, q)
+        assert got.count == len(expect)
+        assert np.array_equal(np.sort(got.docs), expect[: len(got.docs)])
+    assert cache.hits > 0                   # reuse within one pass
