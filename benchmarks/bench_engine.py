@@ -1,5 +1,5 @@
 """Batched vs sequential query-engine throughput + partial-decode accounting
-(ISSUE 1 + ISSUE 2 acceptance gates).
+(ISSUE 1 + ISSUE 2 + ISSUE 3 acceptance gates).
 
 Replays a Table-2-shaped query log (2–5 terms, skewed per-position list
 lengths) through the sequential engine (one device dispatch per fold, host
@@ -9,30 +9,52 @@ several batch sizes.  Two regimes, as in the paper:
   * cached   — Table 4: SvS over already-decoded lists (DecodeCache on both
                paths); isolates intersection + dispatch, which is what the
                batched engine accelerates.  Gate: ≥ 2× at batch ≥ 32.
-  * uncached — Table 5: decode per query; both paths pay the same host-side
-               decode, which dilutes the speedup.
+  * uncached — Table 5: no decoded-value cache.  Since ISSUE 3 the batched
+               numbers measure the *serving fast path*: the device-resident
+               index (``source.ResidentPool``, staged once untimed at
+               build) plus pipelined dispatch — per-batch host decode /
+               pow2 padding / H2D staging is gone, which is where ~70% of
+               the uncached batch time went.  The sequential columns stay
+               pool-less as the reference.  ``batched_b32_host_staged``
+               keeps the old per-batch host-staging path as the A/B point.
+
+Both regimes cover the pallas backend at b32, and the pipelined executor
+(depth 2) is asserted byte-identical to the sequential engine on both
+backends before it is timed (ISSUE 3 gate: uncached/batched_b32_qps ≥ 1.5×
+the PR-2 baseline of 258.6).
 
 A third section replays a *skewed-ratio* log (tiny first term, very long
 second term) and reports decoded-ints/query with the posting-source skip
 path off vs on (``execute_batch(skip=...)``): the ISSUE 2 gate is a ≥ 5×
 drop while results stay byte-identical to the sequential engine on both
-backends.
+backends.  This section runs pool-less on purpose — it gates the
+partial-decode machinery itself, which residency would mask.
 
 Derived column reports queries/sec (and decoded ints/query where that is
 the figure of merit).  CLI: ``--smoke`` runs the reduced sweep standalone
 (CI smoke gate), ``--json PATH`` additionally records a machine-readable
-baseline (BENCH_engine.json).
+baseline (BENCH_engine.json / BENCH_engine_smoke.json), ``--compare PATH``
+prints per-key deltas vs a committed baseline, and ``--max-regress PCT``
+turns the comparison into a CI gate: it fails if the batched-over-
+sequential *speedup* at b32 (cached regime) regressed by more than PCT —
+the ratio of two same-run numbers, so the gate tracks the engine, not the
+absolute speed of the runner it happens to execute on.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 from benchmarks.common import emit
 
 RESULTS: dict[str, float] = {}
+
+# the --max-regress gate compares this speedup ratio (see module docstring)
+GATE_NUM = "cached/batched_b32_qps"
+GATE_DEN = "cached/sequential_qps"
 
 
 def _qps(fn, n_queries: int, reps: int = 3) -> float:
@@ -46,8 +68,10 @@ def _qps(fn, n_queries: int, reps: int = 3) -> float:
 
 
 def _throughput(quick: bool) -> None:
-    from repro.index import builder, corpus as corpus_lib, engine
+    import numpy as np
+    from repro.index import builder, corpus as corpus_lib, engine, source
     from repro.index import batch as batch_lib
+    from repro.index import pipeline as pipe_lib
 
     table = {k: corpus_lib.TABLE2_CLUEWEB[k] for k in (2, 3, 4, 5)}
     n_docs = 1 << 14 if quick else 1 << 16
@@ -58,6 +82,11 @@ def _throughput(quick: bool) -> None:
                         codec_name="fastpfor-d1", B=16, n_parts=2)
     queries = corpus.queries
     batch_sizes = [8, 32] if quick else [8, 32, 128]
+    seq_res = [engine.query(idx, q) for q in queries]   # identity oracle
+
+    def assert_identical(out):
+        for a, b in zip(out, seq_res):
+            assert a.count == b.count and np.array_equal(a.docs, b.docs)
 
     for regime in ["cached", "uncached"]:
         def make_cache():
@@ -70,20 +99,73 @@ def _throughput(quick: bool) -> None:
         emit(f"engine/{regime}/sequential", 1.0 / seq_qps,
              f"{seq_qps:.1f} q/s")
         RESULTS[f"{regime}/sequential_qps"] = round(seq_qps, 1)
+        # device-resident index: staged once (untimed — build-time work)
+        pool = source.ResidentPool()
+        pool.warm(idx)
         for bs in batch_sizes:
             bat_cache = make_cache()
 
-            def run_batched(bs=bs, cache=bat_cache):
+            def run_batched(bs=bs, cache=bat_cache, backend="jax"):
                 out = []
                 for lo in range(0, len(queries), bs):
                     out.extend(batch_lib.execute_batch(
-                        idx, queries[lo: lo + bs], cache=cache))
+                        idx, queries[lo: lo + bs], cache=cache, pool=pool,
+                        backend=backend))
                 return out
 
+            assert_identical(run_batched())
             qps = _qps(run_batched, len(queries))
             emit(f"engine/{regime}/batched_b{bs}", 1.0 / qps,
                  f"{qps:.1f} q/s {qps / seq_qps:.2f}x")
             RESULTS[f"{regime}/batched_b{bs}_qps"] = round(qps, 1)
+
+            def run_pipelined(bs=bs, cache=bat_cache):
+                return pipe_lib.execute_pipelined(
+                    idx, queries, batch_size=bs, depth=2, cache=cache,
+                    pool=pool)
+
+            assert_identical(run_pipelined())
+            qps = _qps(run_pipelined, len(queries))
+            emit(f"engine/{regime}/pipelined_b{bs}", 1.0 / qps,
+                 f"{qps:.1f} q/s {qps / seq_qps:.2f}x")
+            RESULTS[f"{regime}/pipelined_b{bs}_qps"] = round(qps, 1)
+
+        # pallas backend coverage in BOTH regimes (pre-ISSUE 3 only the
+        # cached regime ever touched the kernels in this table); plain
+        # execute_batch so the delta vs batched_b32 isolates the backend
+        pal_cache = make_cache()
+
+        def run_pallas():
+            out = []
+            for lo in range(0, len(queries), 32):
+                out.extend(batch_lib.execute_batch(
+                    idx, queries[lo: lo + 32], cache=pal_cache, pool=pool,
+                    backend="pallas"))
+            return out
+
+        assert_identical(run_pallas())
+        qps = _qps(run_pallas, len(queries))
+        emit(f"engine/{regime}/batched_b32_pallas", 1.0 / qps,
+             f"{qps:.1f} q/s")
+        RESULTS[f"{regime}/batched_b32_pallas_qps"] = round(qps, 1)
+        # ISSUE 3 gate: pipelined output byte-identical on the pallas
+        # backend too (timed pipelined coverage is the jax column above)
+        assert_identical(pipe_lib.execute_pipelined(
+            idx, queries, batch_size=32, depth=2, backend="pallas",
+            pool=pool))
+
+    # A/B reference: the pre-ISSUE-3 uncached path (per-batch host decode,
+    # pow2 padding and H2D staging; no resident pool)
+    def run_host_staged():
+        out = []
+        for lo in range(0, len(queries), 32):
+            out.extend(batch_lib.execute_batch(idx, queries[lo: lo + 32]))
+        return out
+
+    qps = _qps(run_host_staged, len(queries))
+    emit("engine/uncached/batched_b32_host_staged", 1.0 / qps,
+         f"{qps:.1f} q/s")
+    RESULTS["uncached/batched_b32_host_staged_qps"] = round(qps, 1)
 
 
 def _skewed(quick: bool) -> None:
@@ -141,12 +223,53 @@ def run(quick: bool = False) -> None:
     _skewed(quick)
 
 
+def compare(baseline_path: str, max_regress: float | None) -> int:
+    """Print per-key deltas vs a committed baseline; with ``max_regress``
+    also gate on the b32 batched-over-sequential speedup (see module
+    docstring for why the gate is a same-run ratio)."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    bres = base.get("results", {})
+    print(f"# compare vs {baseline_path} (baseline quick={base.get('quick')})")
+    for key in sorted(set(bres) | set(RESULTS)):
+        old, new = bres.get(key), RESULTS.get(key)
+        if old is None:
+            print(f"#   {key}: (new key) {new}")
+        elif new is None:
+            print(f"#   {key}: (missing in this run) baseline {old}")
+        else:
+            pct = (new - old) / old * 100 if old else float("inf")
+            print(f"#   {key}: {old} -> {new} ({pct:+.1f}%)")
+    if max_regress is None:
+        return 0
+    try:
+        new_ratio = RESULTS[GATE_NUM] / RESULTS[GATE_DEN]
+        old_ratio = bres[GATE_NUM] / bres[GATE_DEN]
+    except (KeyError, ZeroDivisionError) as exc:
+        print(f"# GATE ERROR: missing gate keys ({exc})")
+        return 2
+    regress = (1.0 - new_ratio / old_ratio) * 100
+    print(f"# gate {GATE_NUM}/{GATE_DEN}: baseline {old_ratio:.2f}x, "
+          f"now {new_ratio:.2f}x "
+          f"({regress:+.1f}% regression; fails above {max_regress:.0f}%)")
+    if regress > max_regress:
+        print("# GATE FAILED")
+        return 2
+    print("# gate passed")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sweep (CI smoke gate)")
     ap.add_argument("--json", type=str, default=None,
                     help="also write the measured baseline to this path")
+    ap.add_argument("--compare", type=str, default=None, metavar="PATH",
+                    help="print per-key deltas vs a committed baseline JSON")
+    ap.add_argument("--max-regress", type=float, default=None, metavar="PCT",
+                    help="with --compare: fail (exit 2) if the b32 batched "
+                         "speedup regressed more than PCT percent")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(quick=args.smoke)
@@ -160,6 +283,8 @@ def main() -> None:
             json.dump(payload, fh, indent=2, sort_keys=True)
             fh.write("\n")
         print(f"# wrote {args.json}")
+    if args.compare:
+        sys.exit(compare(args.compare, args.max_regress))
 
 
 if __name__ == "__main__":

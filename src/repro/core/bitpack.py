@@ -132,6 +132,19 @@ def layout_np(payload, k_pad: int, t_pad: int, e_pad: int) -> PackedLayout:
                         mode=payload.mode, block_rows=payload.block_rows)
 
 
+def self_pads(payload) -> tuple[int, int, int]:
+    """A skip-capable payload's own pow2 (k_pad, t_pad, e_pad) buckets — the
+    canonical pads for memoizing its PackedLayout projection.  Group buckets
+    are maxima of member self-pads, so a self-padded layout zero-extends
+    into any group slot that admits it (pad blocks: width 0, offsets
+    in-bounds, maxes never read past the real block count)."""
+    k = int(np.asarray(payload.widths).shape[0])
+    t = int(np.asarray(payload.flat_words).shape[0])
+    e = int(np.asarray(getattr(payload, "exc_pos",
+                               np.zeros(0))).shape[0])
+    return (_pow2(k), _pow2(t), _pow2(e) if e else 0)
+
+
 def candidate_block_ids(maxes_np: np.ndarray, values: np.ndarray) -> np.ndarray:
     """Unique block ids whose value range may contain any of ``values``
     (host-side probe of the block-max skip index).  ``values`` are the valid

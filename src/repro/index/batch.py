@@ -29,10 +29,22 @@ query *batches* inside the vectorized regime:
      between terms.  Fold order is decoded-then-packed, which is safe
      because set intersection commutes and the candidate buffer stays
      sorted under ``compact``.  All-bitmap queries reduce to a batched AND
-     + popcount.  Stacking happens host-side in numpy (one device transfer
-     per operand) rather than as per-item device concatenates.
+     + popcount.  Without a pool, stacking happens host-side in numpy (one
+     device transfer per operand); with a ``source.ResidentPool`` the
+     operands are already device-resident and assembly is a pure gather —
+     one eager device stack of resident rows, no decode, no padding memcpy,
+     no H2D transfer (DESIGN.md §2.8).
   3. **Aggregate.** Per-item results are re-assembled per query in index-part
      order, matching the sequential engine byte for byte.
+
+Launch and collect are split (``launch_groups`` dispatches every group
+program and returns a ``PendingBatch`` of un-materialized device results;
+``collect_batch`` blocks and aggregates) so ``repro.index.pipeline`` can
+overlap host scheduling of batch k+1 with device execution of batch k.
+``execute_batch`` composes the two and is byte-identical to the sequential
+engine.  On non-CPU backends the candidate buffer is donated to the device
+program — it is freshly assembled per dispatch and never reused, so XLA can
+reuse its pages for the output.
 
 Algorithm choice: under ``vmap`` the tiled merge runs lock-step across the
 batch — the slowest row sets the step count and its data-dependent early
@@ -67,6 +79,11 @@ MAX_GROUP_SIZE = 128          # hard cap on items per device program
 GROUP_INT_BUDGET = 1 << 25    # cap operand ints per program: B·(J·N+M+J_b·W)
 BATCH_TILED_MAX_RATIO = 4.0   # vmapped tile-merge loses early exit; see above
 
+# Donating the candidate buffer lets XLA alias its pages for the output; it
+# is always freshly stacked per dispatch so nothing aliases it on the host.
+# CPU has no donation support (XLA warns and ignores), so gate it.
+_DONATE_CANDIDATES = (0,) if jax.default_backend() != "cpu" else ()
+
 
 @dataclasses.dataclass(frozen=True)
 class GroupKey:
@@ -90,10 +107,15 @@ class _Item:
     qi: int                # query index within the submitted batch
     pi: int                # index-part ordinal (aggregation order)
     doc_lo: int
-    r: np.ndarray | None = None           # (M,) padded shortest list
-    folds: list | None = None             # J × (N,) padded decoded folds
-    psrc: list | None = None              # Jp × (PackedLayout, blk_ids)
-    bm_words: np.ndarray | None = None    # (J_b, W) bitmap word rows
+    r: object = None                      # (M,) seed: np (host) | jnp (pool)
+    folds: list | None = None             # host: J × (N,) np
+                                          # pool: J × DecodedSource
+    psrc: list | None = None              # Jp × (layout, blk_p) — layout is
+                                          # the self-padded np PackedLayout
+                                          # (host) or the group-padded device
+                                          # operand tuple (pool)
+    bm_words: np.ndarray | None = None    # host: (J_b, W) bitmap word rows
+    bm_dev: list | None = None            # pool: J_b × (W,) resident rows
 
 
 def _bucket_rows(b: int) -> int:
@@ -112,13 +134,16 @@ def _extend_np(vals: np.ndarray, size: int) -> np.ndarray:
 
 
 def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
-             skip: bool = True, stats: dict | None = None
+             skip: bool = True, stats: dict | None = None,
+             pool: "source.ResidentPool | None" = None
              ) -> dict[GroupKey, list[_Item]]:
     """Bucket every (query, part) work item by shape signature.  Terms
     resolve through the posting-source layer here (host side, optionally
     cached): short lists decode, long skip-capable lists keep their packed
-    layout plus host-searched candidate block ids.  Everything downstream
-    of this point is device programs over numpy-stacked arrays."""
+    layout plus host-searched candidate block ids.  With a ResidentPool the
+    items carry *references to resident device buffers*; without one they
+    carry host numpy arrays.  Everything downstream of this point is device
+    programs over stacked operands."""
     codec = codec_lib.get_codec(index.codec_name)
     groups: dict[GroupKey, list[_Item]] = defaultdict(list)
     for qi, term_ids in enumerate(queries):
@@ -129,29 +154,37 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
             pairs = [(t, tp) for t, tp in zip(term_ids, tps)
                      if tp.kind == "list"]
             pairs.sort(key=lambda p: p[1].n)
-            bitmaps = [tp for tp in tps if tp.kind == "bitmap"]
-            W = len(bitmaps[0].payload) if bitmaps else 0
-            bm_words = (np.stack([tp.payload for tp in bitmaps])
-                        if bitmaps else None)
+            bm_pairs = [(t, tp) for t, tp in zip(term_ids, tps)
+                        if tp.kind == "bitmap"]
+            W = len(bm_pairs[0][1].payload) if bm_pairs else 0
+            bm_words = bm_dev = None
+            if bm_pairs:
+                if pool is not None:
+                    bm_dev = [pool.stage_bitmap(("bm", part.uid, t),
+                                                np.asarray(tp.payload))
+                              for t, tp in bm_pairs]
+                else:
+                    bm_words = np.stack([tp.payload for _, tp in bm_pairs])
             if not pairs:
                 key = GroupKey("bitmap", 0, 0, W, "-")
                 groups[key].append(_Item(qi, pi, part.doc_lo,
-                                         bm_words=bm_words))
+                                         bm_words=bm_words, bm_dev=bm_dev))
                 continue
             seed_t, seed_tp = pairs[0]
             seed = source.resolve(part, seed_t, seed_tp, codec, cache=cache,
-                                  r_count=None, stats=stats)
-            r = np.asarray(seed.vals)
-            M = r.shape[0]
+                                  r_count=None, stats=stats, pool=pool)
+            seed_np = (seed.vals_np if seed.vals_np is not None
+                       else np.asarray(seed.vals))
+            M = seed_np.shape[0]
             dec, packed = [], []
             for t, tp in pairs[1:]:
                 src = source.resolve(part, t, tp, codec, cache=cache,
                                      r_count=seed_tp.n, skip=skip,
-                                     stats=stats)
+                                     stats=stats, pool=pool)
                 if isinstance(src, source.PackedSource):
                     packed.append((t, tp, src))
                 else:
-                    dec.append(np.asarray(src.vals))
+                    dec.append(src)
             psig, psrc = None, None
             if packed:
                 # stacking along the fold axis needs one block geometry:
@@ -164,35 +197,51 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
                     same = (p[2].block_rows == rows and p[2].mode == mode)
                     (keep if same else demote).append(p)
                 for t, tp, _ in demote:
-                    # cache=None: a demoted long list must not evict the
-                    # int-budgeted cache's hot short lists
+                    # cache=None / pool=None: a demoted long list must not
+                    # evict the int-budgeted stores' hot short lists — and
+                    # staging it resident would permanently win over
+                    # want_skip, disabling its block-max skip path over a
+                    # one-off grouping accident
                     src = source.resolve(part, t, tp, codec, cache=None,
-                                         skip=False, stats=stats)
-                    dec.append(np.asarray(src.vals))
-                r_valid = r[: seed.n]
+                                         skip=False, stats=stats, pool=None)
+                    dec.append(src)
+                r_valid = seed_np[: seed.n]
                 cand = [(s, s.candidate_block_ids(r_valid))
                         for _, _, s in keep]
-                k_pad = max(its.pow2_bucket(s.num_blocks, floor=1)
-                            for s, _ in cand)
-                t_pad = max(its.pow2_bucket(s.num_rows, floor=1)
-                            for s, _ in cand)
+                k_pad = max(s.self_pads()[0] for s, _ in cand)
+                t_pad = max(s.self_pads()[1] for s, _ in cand)
                 c_pad = max(its.pow2_bucket(len(b), floor=source.CAND_FLOOR)
                             for _, b in cand)
                 e_max = max(s.num_exceptions for s, _ in cand)
                 e_pad = its.pow2_bucket(e_max, floor=1) if e_max else 0
                 psig = (k_pad, t_pad, c_pad, e_pad, rows, mode)
-                psrc = [(source.cached_layout_np(s, (k_pad, t_pad, e_pad)),
-                         source.pad_block_ids(b, c_pad, k_pad))
-                        for s, b in cand]
+                if pool is not None:
+                    psrc = [(source.cached_layout_dev(
+                                s, (k_pad, t_pad, e_pad), stats),
+                             source.pad_block_ids(b, c_pad, k_pad))
+                            for s, b in cand]
+                else:
+                    # memoized at the payload's own pads; the stacker
+                    # zero-extends into the group slot (no per-group re-pad)
+                    psrc = [(source.cached_layout_np(s, s.self_pads(), stats),
+                             source.pad_block_ids(b, c_pad, k_pad))
+                            for s, b in cand]
                 source._bump(stats, "skip_folds", len(psrc))
                 source._bump(stats, "decoded_ints",
                              len(psrc) * c_pad * rows * 128)
-            N = max((v.shape[0] for v in dec), default=128)
-            folds = [_extend_np(v, N) for v in dec]
+            N = max((s.vals.shape[0] for s in dec), default=128)
+            if pool is not None:
+                r_op = seed.vals
+                folds = dec                          # padded at stack time
+            else:
+                r_op = seed_np
+                folds = [_extend_np(s.vals_np if s.vals_np is not None
+                                    else np.asarray(s.vals), N) for s in dec]
             algo = ("tiled" if N / M <= BATCH_TILED_MAX_RATIO else "gallop")
             key = GroupKey("svs", M, N, W, algo, psig)
-            groups[key].append(_Item(qi, pi, part.doc_lo, r=r, folds=folds,
-                                     psrc=psrc, bm_words=bm_words))
+            groups[key].append(_Item(qi, pi, part.doc_lo, r=r_op,
+                                     folds=folds, psrc=psrc,
+                                     bm_words=bm_words, bm_dev=bm_dev))
     return groups
 
 
@@ -219,13 +268,15 @@ def _probe_scan(r, words):
     return r, its.count_valid(r)
 
 
-@partial(jax.jit, static_argnames=("algo", "backend", "mode", "block_rows"))
+@partial(jax.jit, static_argnames=("algo", "backend", "mode", "block_rows"),
+         donate_argnums=_DONATE_CANDIDATES)
 def _svs_program(r, folds, fold_active, pk, pk_active, words, algo: str,
                  backend: str, mode: str, block_rows: int):
     """One device program per group chunk: decoded folds → packed folds →
     bitmap probes, candidates staying on device throughout.  ``pk`` is the
     tuple of stacked batch-uniform packed operands (or None); ``words`` the
-    stacked bitmap rows (or None)."""
+    stacked bitmap rows (or None).  ``r`` is donated off-CPU (see module
+    docstring)."""
     if folds.shape[0]:
         if backend == "pallas":
             r, _ = _fold_pallas(r, folds, fold_active)
@@ -259,8 +310,12 @@ def _bitmap_and_program(words):
 
 def _stack_packed(key: GroupKey, items: list[_Item], Bp: int):
     """Stack the per-item packed layouts into uniform (Jp, Bp, ...) device
-    operands.  Inactive (j, b) slots keep all-pad block ids (→ all-SENTINEL
-    decode) and are additionally masked by the active flags."""
+    operands.  Layouts arrive self-padded (the memoized projection); each
+    slot zero-extends into the group buckets — pad blocks have width 0 and
+    in-bounds offsets, and block ids beyond the real count never appear in
+    the candidate list, so the extension is never decoded.  Inactive (j, b)
+    slots keep all-pad block ids (→ all-SENTINEL decode) and are
+    additionally masked by the active flags."""
     k_pad, t_pad, c_pad, e_pad, rows, _ = key.packed
     Jp = max(len(it.psrc) for it in items)
     PW = np.zeros((Jp, Bp, t_pad, 128), np.uint32)
@@ -273,78 +328,161 @@ def _stack_packed(key: GroupKey, items: list[_Item], Bp: int):
     active = np.zeros((Jp, Bp), bool)
     for b, it in enumerate(items):
         for j, (lay, blk_p) in enumerate(it.psrc):
-            PW[j, b] = lay.words
-            PWid[j, b] = lay.widths
-            POf[j, b] = lay.offsets
-            PMx[j, b] = lay.maxes
+            K, T, E = (lay.widths.shape[0], lay.words.shape[0],
+                       lay.exc_pos.shape[0])
+            PW[j, b, :T] = lay.words
+            PWid[j, b, :K] = lay.widths
+            POf[j, b, :K] = lay.offsets
+            PMx[j, b, :K] = lay.maxes
             PBk[j, b] = blk_p
-            if e_pad:
-                PEp[j, b] = lay.exc_pos
-                PEa[j, b] = lay.exc_add
+            if e_pad and E:
+                PEp[j, b, :E] = lay.exc_pos
+                PEa[j, b, :E] = lay.exc_add
             active[j, b] = True
     pk = tuple(jnp.asarray(x) for x in (PW, PWid, POf, PMx, PBk, PEp, PEa))
     return pk, jnp.asarray(active)
 
 
-def _run_svs_group(key: GroupKey, items: list[_Item], backend: str):
-    """One device program: stacked decoded folds + packed folds + bitmap
-    probes for `items`.
+def _stack_packed_dev(key: GroupKey, items: list[_Item], Bp: int):
+    """Pool-mode packed stacking: gather the memoized group-padded device
+    layout operands of every (j, b) slot into (Jp, Bp, ...) stacks — one
+    eager device stack per operand, no host padding or word transfer (only
+    the tiny per-query candidate block ids cross to the device)."""
+    k_pad, t_pad, c_pad, e_pad, rows, _ = key.packed
+    Jp = max(len(it.psrc) for it in items)
+    pad_lay = source.pad_layout_dev((k_pad, t_pad, e_pad))
+    ops = [[] for _ in range(6)]
+    PBk = np.full((Jp, Bp, c_pad), k_pad, np.int32)
+    active = np.zeros((Jp, Bp), bool)
+    for j in range(Jp):
+        for b in range(Bp):
+            it = items[b] if b < len(items) else None
+            if it is not None and j < len(it.psrc):
+                lay, blk_p = it.psrc[j]
+                PBk[j, b] = blk_p
+                active[j, b] = True
+            else:
+                lay = pad_lay
+            for o in range(6):
+                ops[o].append(lay[o])
+    stacked = [jnp.stack(rows).reshape((Jp, Bp) + rows[0].shape)
+               for rows in ops]
+    pk = (stacked[0], stacked[1], stacked[2], stacked[3],
+          jnp.asarray(PBk), stacked[4], stacked[5])
+    return pk, jnp.asarray(active)
 
-    The batch dimension is bucketed to a power of two (sentinel-padded rows,
-    results sliced back) so the jit/compile count stays bounded by the
-    signature space instead of growing with every distinct group occupancy.
-    """
+
+def _assemble_svs(key: GroupKey, items: list[_Item],
+                  pool: "source.ResidentPool | None"):
+    """Build the device operands of one svs group chunk.  Host mode stacks
+    numpy and pays one H2D per operand; pool mode gathers resident rows."""
     B = len(items)
     Bp = _bucket_rows(B)
     J = max(len(it.folds) for it in items)
-    Jb = max(it.bm_words.shape[0] if it.bm_words is not None else 0
+    Jb = max((it.bm_words.shape[0] if it.bm_words is not None
+              else len(it.bm_dev) if it.bm_dev is not None else 0)
              for it in items)
-    R = np.full((Bp, key.m_bucket), its.SENTINEL, dtype=np.int32)
-    for b, it in enumerate(items):
-        R[b] = it.r
-    R = jnp.asarray(R)                                          # (Bp, M)
-    F = np.full((J, Bp, key.n_bucket), its.SENTINEL, dtype=np.int32)
     active = np.zeros((J, Bp), dtype=bool)
-    for b, it in enumerate(items):
-        for j, fold in enumerate(it.folds):
-            F[j, b] = fold
-            active[j, b] = True
-    F, active = jnp.asarray(F), jnp.asarray(active)             # (J, Bp, N)
+    if pool is not None:
+        R = jnp.stack([it.r for it in items]
+                      + [pool.sentinel_row(key.m_bucket)] * (Bp - B))
+        rows = []
+        for j in range(J):
+            for b in range(Bp):
+                it = items[b] if b < B else None
+                if it is not None and j < len(it.folds):
+                    rows.append(pool.padded(it.folds[j], key.n_bucket))
+                    active[j, b] = True
+                else:
+                    rows.append(pool.sentinel_row(key.n_bucket))
+        F = (jnp.stack(rows).reshape(J, Bp, key.n_bucket) if J
+             else jnp.zeros((0, Bp, key.n_bucket), jnp.int32))
+        W = None
+        if Jb:
+            wrows = []
+            for j in range(Jb):
+                for b in range(Bp):
+                    it = items[b] if b < B else None
+                    if it is not None and it.bm_dev and j < len(it.bm_dev):
+                        wrows.append(it.bm_dev[j])
+                    else:
+                        # inactive slots are all-ones — the probe identity
+                        wrows.append(pool.ones_row(key.words))
+            W = jnp.stack(wrows).reshape(Jb, Bp, key.words)
+    else:
+        Rnp = np.full((Bp, key.m_bucket), its.SENTINEL, dtype=np.int32)
+        for b, it in enumerate(items):
+            Rnp[b] = it.r
+        R = jnp.asarray(Rnp)                                    # (Bp, M)
+        F = np.full((J, Bp, key.n_bucket), its.SENTINEL, dtype=np.int32)
+        for b, it in enumerate(items):
+            for j, fold in enumerate(it.folds):
+                F[j, b] = fold
+                active[j, b] = True
+        F = jnp.asarray(F)                                      # (J, Bp, N)
+        W = None
+        if Jb:
+            # inactive slots are all-ones rows — the probe identity
+            Wnp = np.full((Jb, Bp, key.words), 0xFFFFFFFF, dtype=np.uint32)
+            for b, it in enumerate(items):
+                if it.bm_words is not None:
+                    for j in range(it.bm_words.shape[0]):
+                        Wnp[j, b] = it.bm_words[j]
+            W = jnp.asarray(Wnp)
     pk = pk_active = None
+    if key.packed is not None:
+        if pool is not None:
+            pk, pk_active = _stack_packed_dev(key, items, Bp)
+        else:
+            pk, pk_active = _stack_packed(key, items, Bp)
+    return R, F, jnp.asarray(active), pk, pk_active, W, Bp, J, Jb
+
+
+def _launch_svs_group(key: GroupKey, items: list[_Item], backend: str,
+                      pool, stats: dict | None):
+    """Dispatch one svs device program; returns un-materialized device
+    results (vals, counts).  The batch dimension is bucketed (sentinel-
+    padded rows, results sliced back at collect time) so the compile count
+    stays bounded by the signature space."""
+    R, F, active, pk, pk_active, W, Bp, J, Jb = _assemble_svs(key, items, pool)
     mode, rows = "d1", 32
     if key.packed is not None:
-        pk, pk_active = _stack_packed(key, items, Bp)
         rows, mode = key.packed[4], key.packed[5]
-    W = None
-    if Jb:
-        # inactive slots are all-ones rows — the probe identity
-        Wnp = np.full((Jb, Bp, key.words), 0xFFFFFFFF, dtype=np.uint32)
-        for b, it in enumerate(items):
-            if it.bm_words is not None:
-                for j in range(it.bm_words.shape[0]):
-                    Wnp[j, b] = it.bm_words[j]
-        W = jnp.asarray(Wnp)
-    R, counts = _svs_program(R, F, active, pk, pk_active, W,
-                             key.algo, backend, mode, rows)
-    vals = np.asarray(R)
-    cnts = np.asarray(counts)
-    return [(vals[b, : cnts[b]], int(cnts[b])) for b in range(B)]
+    if stats is not None:
+        stats.setdefault("signatures", set()).add(("svs", key, Bp, J, Jb))
+    return _svs_program(R, F, active, pk, pk_active, W,
+                        key.algo, backend, mode, rows)
 
 
-def _run_bitmap_group(key: GroupKey, items: list[_Item]):
+def _launch_bitmap_group(key: GroupKey, items: list[_Item], pool,
+                         stats: dict | None):
     B = len(items)
     Bp = _bucket_rows(B)
-    J = max(it.bm_words.shape[0] for it in items)
-    # real rows pad missing terms with all-ones (AND identity); padded batch
-    # rows stay all-zero so their popcount is 0
-    words = np.zeros((Bp, J, key.words), dtype=np.uint32)
-    for b, it in enumerate(items):
-        words[b] = 0xFFFFFFFF
-        words[b, : it.bm_words.shape[0]] = it.bm_words
-    anded, counts = _bitmap_and_program(jnp.asarray(words))
-    anded = np.asarray(anded)
-    cnts = np.asarray(counts)
-    return [(bm.extract_np(anded[b]), int(cnts[b])) for b in range(B)]
+    J = max((it.bm_words.shape[0] if it.bm_words is not None
+             else len(it.bm_dev)) for it in items)
+    if pool is not None:
+        rows = []
+        for b in range(Bp):
+            it = items[b] if b < B else None
+            for j in range(J):
+                if it is not None and j < len(it.bm_dev):
+                    rows.append(it.bm_dev[j])
+                elif it is not None:
+                    rows.append(pool.ones_row(key.words))   # AND identity
+                else:
+                    rows.append(pool.zeros_row(key.words))  # popcount 0
+        words = jnp.stack(rows).reshape(Bp, J, key.words)
+    else:
+        # real rows pad missing terms with all-ones (AND identity); padded
+        # batch rows stay all-zero so their popcount is 0
+        wnp = np.zeros((Bp, J, key.words), dtype=np.uint32)
+        for b, it in enumerate(items):
+            wnp[b] = 0xFFFFFFFF
+            wnp[b, : it.bm_words.shape[0]] = it.bm_words
+        words = jnp.asarray(wnp)
+    if stats is not None:
+        stats.setdefault("signatures", set()).add(("bm", key, Bp, J))
+    return _bitmap_and_program(words)
 
 
 def _chunk_size(key: GroupKey, items: list[_Item],
@@ -352,11 +490,13 @@ def _chunk_size(key: GroupKey, items: list[_Item],
     """Items per device program: flat cap ∧ operand-int budget (so huge
     J·N fold stacks shrink the batch instead of exploding device memory)."""
     if key.kind == "bitmap":
-        J = max(it.bm_words.shape[0] for it in items)
+        J = max((it.bm_words.shape[0] if it.bm_words is not None
+                 else len(it.bm_dev)) for it in items)
         per_item = J * key.words
     else:
         J = max(len(it.folds) for it in items)
-        Jb = max(it.bm_words.shape[0] if it.bm_words is not None else 0
+        Jb = max((it.bm_words.shape[0] if it.bm_words is not None
+                  else len(it.bm_dev) if it.bm_dev is not None else 0)
                  for it in items)
         per_item = J * key.n_bucket + key.m_bucket + Jb * key.words
         if key.packed is not None:
@@ -370,52 +510,103 @@ def _chunk_size(key: GroupKey, items: list[_Item],
 
 
 # --------------------------------------------------------------------------
-# public entry point
+# launch / collect (the pipeline split) and the public entry point
 # --------------------------------------------------------------------------
 
-def execute_batch(index: HybridIndex, queries: list[list[int]], *,
-                  backend: str = "jax", max_results: int = 1 << 16,
-                  max_group_size: int = MAX_GROUP_SIZE, cache=None,
-                  skip: bool = True,
-                  stats: dict | None = None) -> list[QueryResult]:
-    """Answer a batch of conjunctive queries; results are element-for-element
-    identical to ``engine.query`` run per query.
+@dataclasses.dataclass
+class PendingBatch:
+    """Dispatched-but-unmaterialized batch: device result handles per group
+    chunk.  JAX async dispatch means the device is (or will be) executing
+    these while the host moves on; ``collect_batch`` blocks on them."""
+    n_queries: int
+    max_results: int
+    launched: list          # [(key, chunk_items, vals_dev, counts_dev)]
+    stats: dict | None
 
-    backend: 'jax' (searchsorted/tile-merge) or 'pallas' (galloping kernel).
-    skip: False forces full decode of every fold list (the pre-skip
-    behavior, kept for A/B benchmarking of the partial-decode win).
-    stats: optional dict, filled with scheduler counters (n_groups,
-    n_programs, n_items, decoded_ints, skip_folds) for introspection.
-    """
-    assert backend in ("jax", "pallas"), backend
-    groups = schedule(index, queries, cache=cache, skip=skip, stats=stats)
-    per_query: list[list[tuple[int, np.ndarray]]] = [[] for _ in queries]
-    counts = [0] * len(queries)
+
+def launch_groups(groups: dict[GroupKey, list[_Item]], *, n_queries: int,
+                  backend: str = "jax", max_results: int = 1 << 16,
+                  max_group_size: int = MAX_GROUP_SIZE,
+                  pool: "source.ResidentPool | None" = None,
+                  stats: dict | None = None) -> PendingBatch:
+    """Dispatch one device program per group chunk without materializing
+    any result — the host returns as soon as everything is enqueued."""
+    launched = []
     n_programs = 0
     for key, items in groups.items():
         step = _chunk_size(key, items, max_group_size)
         for lo in range(0, len(items), step):
             chunk = items[lo: lo + step]
             if key.kind == "bitmap":
-                results = _run_bitmap_group(key, chunk)
+                vals, counts = _launch_bitmap_group(key, chunk, pool, stats)
             else:
-                results = _run_svs_group(key, chunk, backend)
+                vals, counts = _launch_svs_group(key, chunk, backend, pool,
+                                                 stats)
+            launched.append((key, chunk, vals, counts))
             n_programs += 1
-            for it, (docs, cnt) in zip(chunk, results):
-                counts[it.qi] += cnt
-                if cnt:
-                    per_query[it.qi].append(
-                        (it.pi, docs.astype(np.int64) + it.doc_lo))
     if stats is not None:
         # accumulate (like the decoded_ints/skip_folds counters) so one
-        # stats dict can span a chunked run of many execute_batch calls
+        # stats dict can span a chunked run of many batches
         for k, v in (("n_groups", len(groups)), ("n_programs", n_programs),
                      ("n_items", sum(len(v) for v in groups.values()))):
             stats[k] = stats.get(k, 0) + v
+    return PendingBatch(n_queries=n_queries, max_results=max_results,
+                        launched=launched, stats=stats)
+
+
+def collect_batch(pending: PendingBatch) -> list[QueryResult]:
+    """Materialize a launched batch (blocks on the device) and re-assemble
+    per-query results in part order — byte-identical to ``engine.query``."""
+    per_query: list[list[tuple[int, np.ndarray]]] = \
+        [[] for _ in range(pending.n_queries)]
+    counts = [0] * pending.n_queries
+    for key, chunk, vals_dev, counts_dev in pending.launched:
+        vals = np.asarray(vals_dev)
+        cnts = np.asarray(counts_dev)
+        for b, it in enumerate(chunk):
+            cnt = int(cnts[b])
+            counts[it.qi] += cnt
+            if not cnt:
+                continue
+            if key.kind == "bitmap":
+                docs = bm.extract_np(vals[b])
+            else:
+                docs = vals[b, : cnt]
+            per_query[it.qi].append((it.pi, docs.astype(np.int64)
+                                     + it.doc_lo))
     out = []
-    for qi in range(len(queries)):
+    for qi in range(pending.n_queries):
         chunks = [d for _, d in sorted(per_query[qi], key=lambda x: x[0])]
         docs = (np.concatenate(chunks) if chunks
-                else np.zeros(0, np.int64))[:max_results]
+                else np.zeros(0, np.int64))[: pending.max_results]
         out.append(QueryResult(count=counts[qi], docs=docs))
     return out
+
+
+def execute_batch(index: HybridIndex, queries: list[list[int]], *,
+                  backend: str = "jax", max_results: int = 1 << 16,
+                  max_group_size: int = MAX_GROUP_SIZE, cache=None,
+                  skip: bool = True, stats: dict | None = None,
+                  pool: "source.ResidentPool | None" = None
+                  ) -> list[QueryResult]:
+    """Answer a batch of conjunctive queries; results are element-for-element
+    identical to ``engine.query`` run per query.
+
+    backend: 'jax' (searchsorted/tile-merge) or 'pallas' (galloping kernel).
+    skip: False forces full decode of every fold list (the pre-skip
+    behavior, kept for A/B benchmarking of the partial-decode win).
+    pool: optional ResidentPool — operands are served from (and staged
+    into) the device-resident index; group assembly becomes index-gathering
+    over resident buffers instead of per-batch decode + padding + H2D.
+    stats: optional dict, filled with scheduler counters (n_groups,
+    n_programs, n_items, decoded_ints, skip_folds, resident_hits,
+    layout_hits/misses) for introspection.
+    """
+    assert backend in ("jax", "pallas"), backend
+    groups = schedule(index, queries, cache=cache, skip=skip, stats=stats,
+                      pool=pool)
+    pending = launch_groups(groups, n_queries=len(queries), backend=backend,
+                            max_results=max_results,
+                            max_group_size=max_group_size, pool=pool,
+                            stats=stats)
+    return collect_batch(pending)

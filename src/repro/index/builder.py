@@ -67,10 +67,16 @@ class HybridIndex:
 
 def build(postings: list[np.ndarray], n_docs: int, codec_name: str = "bp-d1",
           B: int = 0, n_parts: int = 1, keep_raw: bool = False,
-          varint_tail_below: int = 1024) -> HybridIndex:
+          varint_tail_below: int = 1024,
+          precompute_layouts: bool = True) -> HybridIndex:
     """varint_tail_below: lists shorter than this are stored Varint — the
     paper's tail-codec rule (block packing pays block/n × padding overhead on
-    tiny lists; EXPERIMENTS §Perf c4)."""
+    tiny lists; EXPERIMENTS §Perf c4).
+
+    precompute_layouts: project every skip-capable list onto its self-padded
+    batch-uniform PackedLayout at build time (memoized per payload uid in
+    the posting-source layer), so serving never pays the projection on the
+    query path (DESIGN.md §2.8)."""
     codec = codec_lib.get_codec(codec_name)
     tail_codec = codec_lib.get_codec("varint")
     bounds = np.linspace(0, n_docs, n_parts + 1).astype(np.int64)
@@ -96,4 +102,7 @@ def build(postings: list[np.ndarray], n_docs: int, codec_name: str = "bp-d1",
                     "list", c.encode(seg), int(seg.size),
                     raw=seg if keep_raw else None)
         parts.append(IndexPart(lo, hi, terms))
+    if precompute_layouts:
+        from repro.index import source
+        source.precompute_layouts(parts)
     return HybridIndex(n_docs=n_docs, B=B, codec_name=codec_name, parts=parts)

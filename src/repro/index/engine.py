@@ -107,13 +107,10 @@ def _packed_probe(r, r_count: int, src: source.PackedSource,
     The padded device operands are memoized per (part, term) — only the
     per-query candidate block ids move host→device here."""
     blk = src.candidate_block_ids(np.asarray(r)[:r_count])
-    k_pad = its.pow2_bucket(src.num_blocks, floor=1)
-    t_pad = its.pow2_bucket(src.num_rows, floor=1)
-    e_pad = (its.pow2_bucket(src.num_exceptions, floor=1)
-             if src.num_exceptions else 0)
+    k_pad, t_pad, e_pad = src.self_pads()
     c_pad = its.pow2_bucket(len(blk), floor=source.CAND_FLOOR)
     words, widths, offsets, maxes, exc_pos, exc_add = \
-        source.cached_layout_dev(src, (k_pad, t_pad, e_pad))
+        source.cached_layout_dev(src, (k_pad, t_pad, e_pad), stats)
     blk_p = jnp.asarray(source.pad_block_ids(blk, c_pad, k_pad))
     source._bump(stats, "decoded_ints", c_pad * src.block_rows * 128)
     source._bump(stats, "skip_folds")
@@ -129,7 +126,7 @@ def _packed_probe(r, r_count: int, src: source.PackedSource,
 
 def _intersect_part(part: IndexPart, term_ids: list[int], codec,
                     skip: bool = True, cache=None,
-                    stats: dict | None = None):
+                    stats: dict | None = None, pool=None):
     """Returns (padded candidate vals, count) or ('bitmap', words)."""
     tps = [part.terms[t] for t in term_ids]
     if any(tp.kind == "empty" for tp in tps):
@@ -147,13 +144,14 @@ def _intersect_part(part: IndexPart, term_ids: list[int], codec,
     id_of = {id(tp): t for t, tp in zip(term_ids, tps)}
     # the shortest list seeds the candidate buffer — always decoded
     seed = source.resolve(part, id_of[id(lists[0])], lists[0], codec,
-                          cache=cache, r_count=None, stats=stats)
+                          cache=cache, r_count=None, stats=stats, pool=pool)
     r, r_count = seed.vals, seed.n
     for tp in lists[1:]:
         if r_count == 0:
             break
         src = source.resolve(part, id_of[id(tp)], tp, codec, cache=cache,
-                             r_count=r_count, skip=skip, stats=stats)
+                             r_count=r_count, skip=skip, stats=stats,
+                             pool=pool)
         if isinstance(src, source.PackedSource):
             # paper's galloping+skip: search the block-max index, decode only
             # candidate blocks — the long list is never fully decoded.
@@ -176,18 +174,21 @@ def _intersect_part(part: IndexPart, term_ids: list[int], codec,
 
 def query(index: HybridIndex, term_ids: list[int],
           max_results: int = 1 << 16, cache: "DecodeCache | None" = None,
-          skip: bool = True, stats: dict | None = None) -> QueryResult:
+          skip: bool = True, stats: dict | None = None,
+          pool: "source.ResidentPool | None" = None) -> QueryResult:
     """cache: optional DecodeCache → the paper's Table 4 regime (SvS over
     already-decoded lists); None → Table 5 regime (decode per query).
     Either way long skip-capable lists go through the packed skip path
     (``skip=False`` forces full decode everywhere, for A/B benchmarks).
-    stats: optional dict accumulating decoded_ints / skip_folds counters."""
+    stats: optional dict accumulating decoded_ints / skip_folds counters.
+    pool: optional ResidentPool — decoded operands are served from (and
+    staged into) the device-resident index (DESIGN.md §2.8)."""
     codec = codec_lib.get_codec(index.codec_name)
     total = 0
     out_docs = []
     for part in index.parts:
         res, cnt = _intersect_part(part, term_ids, codec, skip=skip,
-                                   cache=cache, stats=stats)
+                                   cache=cache, stats=stats, pool=pool)
         total += cnt
         if cnt and res is not None:
             kind, payload = res

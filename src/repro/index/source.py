@@ -22,6 +22,13 @@ the cache (their decode cost is exactly what the skip index avoids).
 serve.py and bench_engine.py report: every integer materialized from a
 compressed payload is counted, so the partial-decode win is visible as a
 number, not a belief.
+
+Device residency (DESIGN.md §2.8): ``ResidentPool`` keeps resolved operands
+— decoded value rows, bitmap word rows, and (via the layout memo) packed
+layout operands — staged on device with explicit ``jax.device_put`` and
+LRU eviction accounting, so steady-state batch assembly is pure
+index-gathering over resident buffers instead of per-batch decode + pow2
+padding + H2D transfer.
 """
 
 from __future__ import annotations
@@ -30,6 +37,7 @@ import dataclasses
 from collections import OrderedDict
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import bitpack
@@ -51,9 +59,16 @@ CAND_FLOOR = 8
 
 @dataclasses.dataclass
 class DecodedSource:
-    """Fully decoded posting list: padded int32 values + valid count."""
+    """Fully decoded posting list: padded int32 values + valid count.
+
+    ``vals`` may live on host (numpy) or device (pool-resident / cached);
+    ``vals_np`` is the host copy when one exists for free (fresh decodes,
+    pool entries) so schedulers can read values without a D2H sync.
+    ``key`` is the (part.uid, tid) identity for pool lookups."""
     vals: jnp.ndarray
     n: int
+    vals_np: np.ndarray | None = None
+    key: tuple = ()
 
 
 @dataclasses.dataclass
@@ -92,6 +107,12 @@ class PackedSource:
     def layout(self, k_pad: int, t_pad: int, e_pad: int) -> bitpack.PackedLayout:
         return bitpack.layout_np(self.payload, k_pad, t_pad, e_pad)
 
+    def self_pads(self) -> tuple[int, int, int]:
+        """The payload's own pow2 buckets — the canonical memoization pads
+        (group buckets are maxima of member self-pads, so a group-sized
+        stack slot zero-extends a self-padded layout; see batch.py)."""
+        return bitpack.self_pads(self.payload)
+
 
 def pad_block_ids(blk: np.ndarray, c_pad: int, k_pad: int) -> np.ndarray:
     """Pad a candidate block-id list to the group bucket; pad entries use the
@@ -118,11 +139,12 @@ def _layout_ints(pads: tuple) -> int:
     return t_pad * bitpack.LANES + 3 * k_pad + 2 * e_pad
 
 
-def _layout_entry(src: PackedSource, pads: tuple):
+def _layout_entry(src: PackedSource, pads: tuple, stats: dict | None = None):
     global _layout_cache_size
     key = (src.key, pads)
     entry = _LAYOUT_CACHE.get(key)
     if entry is None:
+        _bump(stats, "layout_misses")
         entry = {"np": src.layout(*pads), "dev": None}
         _LAYOUT_CACHE[key] = entry
         _layout_cache_size += _layout_ints(pads)
@@ -131,25 +153,70 @@ def _layout_entry(src: PackedSource, pads: tuple):
             (_, old_pads), _ = _LAYOUT_CACHE.popitem(last=False)
             _layout_cache_size -= _layout_ints(old_pads)
     else:
+        _bump(stats, "layout_hits")
         _LAYOUT_CACHE.move_to_end(key)
     return entry
 
 
-def cached_layout_np(src: PackedSource, pads: tuple) -> bitpack.PackedLayout:
+def cached_layout_np(src: PackedSource, pads: tuple,
+                     stats: dict | None = None) -> bitpack.PackedLayout:
     """Memoized host-side padded layout (batch scheduler stacking)."""
-    return _layout_entry(src, pads)["np"]
+    return _layout_entry(src, pads, stats)["np"]
 
 
-def cached_layout_dev(src: PackedSource, pads: tuple) -> tuple:
-    """Memoized device-resident layout operands (sequential probe):
-    (words, widths, offsets, maxes, exc_pos, exc_add) jnp arrays."""
-    entry = _layout_entry(src, pads)
+def cached_layout_dev(src: PackedSource, pads: tuple,
+                      stats: dict | None = None) -> tuple:
+    """Memoized device-resident layout operands (sequential probe and the
+    pool-resident batch stacks): (words, widths, offsets, maxes, exc_pos,
+    exc_add) jnp arrays."""
+    entry = _layout_entry(src, pads, stats)
     if entry["dev"] is None:
         lay = entry["np"]
-        entry["dev"] = (jnp.asarray(lay.words), jnp.asarray(lay.widths),
-                        jnp.asarray(lay.offsets), jnp.asarray(lay.maxes),
-                        jnp.asarray(lay.exc_pos), jnp.asarray(lay.exc_add))
+        entry["dev"] = tuple(jax.device_put(x) for x in (
+            lay.words, lay.widths, lay.offsets, lay.maxes,
+            lay.exc_pos, lay.exc_add))
     return entry["dev"]
+
+
+# Inactive packed fold slots in a device-stacked group need all-pad layout
+# rows (width-0 blocks, in-bounds offsets, dropped exceptions) — memoized
+# per pads since every group of that signature reuses the same rows.
+_PAD_LAYOUTS: dict[tuple, tuple] = {}
+
+
+def pad_layout_dev(pads: tuple) -> tuple:
+    """Device operands of an all-pad (inactive) layout slot for ``pads`` =
+    (k_pad, t_pad, e_pad): decodes to all-SENTINEL under the candidate mask
+    because its block ids are never listed as candidates."""
+    entry = _PAD_LAYOUTS.get(pads)
+    if entry is None:
+        k_pad, t_pad, e_pad = pads
+        entry = tuple(jax.device_put(x) for x in (
+            np.zeros((t_pad, bitpack.LANES), np.uint32),
+            np.zeros(k_pad, np.int32),
+            np.zeros(k_pad, np.int32),
+            np.zeros(k_pad, np.uint32),
+            np.full(e_pad, -1, np.int32),
+            np.zeros(e_pad, np.uint32)))
+        _PAD_LAYOUTS[pads] = entry
+    return entry
+
+
+def precompute_layouts(parts, stats: dict | None = None) -> int:
+    """Build-time projection of every skip-capable list payload onto its
+    self-padded PackedLayout, warming the layout memo so serving never
+    re-pads on the host (ISSUE 3).  Returns the number of layouts staged."""
+    n = 0
+    for part in parts:
+        for tid, tp in part.terms.items():
+            if (tp.kind == "list" and bitpack.skip_capable(tp.payload)
+                    and int(tp.payload.widths.shape[0]) >= SKIP_MIN_BLOCKS):
+                src = PackedSource(tp.payload, tp.n,
+                                   maxes_np=np.asarray(tp.payload.maxes),
+                                   key=(part.uid, tid))
+                cached_layout_np(src, src.self_pads(), stats)
+                n += 1
+    return n
 
 
 def decoded_ints_of(payload) -> int:
@@ -161,8 +228,8 @@ def decoded_ints_of(payload) -> int:
     return payload.n
 
 
-def decode_padded(codec, tp) -> tuple[jnp.ndarray, int]:
-    """Decode one term posting to (pow2-padded int32 vals, count)."""
+def decode_padded_np(codec, tp) -> tuple[np.ndarray, int]:
+    """Decode one term posting to (pow2-padded int32 numpy vals, count)."""
     if isinstance(tp.payload, bitpack.PackedList):
         vals = np.asarray(bitpack.decode_bucketed(tp.payload))[: tp.n]
         vals = vals.astype(np.int32)
@@ -171,7 +238,13 @@ def decode_padded(codec, tp) -> tuple[jnp.ndarray, int]:
     else:
         vals = np.asarray(codec.decode(tp.payload))[: tp.n].astype(np.int32)
     size = its.pow2_bucket(tp.n)
-    return jnp.asarray(its.pad_to(vals, size)), tp.n
+    return its.pad_to(vals, size), tp.n
+
+
+def decode_padded(codec, tp) -> tuple[jnp.ndarray, int]:
+    """Decode one term posting to (pow2-padded int32 device vals, count)."""
+    vals, n = decode_padded_np(codec, tp)
+    return jnp.asarray(vals), n
 
 
 def _bump(stats, key, by=1):
@@ -179,14 +252,193 @@ def _bump(stats, key, by=1):
         stats[key] = stats.get(key, 0) + by
 
 
+# --------------------------------------------------------------------------
+# device-resident operand pool (DESIGN.md §2.8)
+# --------------------------------------------------------------------------
+
+class ResidentPool:
+    """Device-resident index operands: decoded value rows and bitmap word
+    rows staged once with explicit ``jax.device_put`` and reused by every
+    subsequent batch (packed layouts stay resident through the layout memo
+    above — same lifecycle, different key space).
+
+    Entries are LRU-evicted against an int budget with explicit accounting
+    (``staged_*`` / ``evicted_*`` / ``resident_ints``), because residency is
+    a *capacity decision*: a decoded pool the size of the corpus is just an
+    uncompressed index.  ``warm`` stages the decode-policy lists up front
+    (build-time staging); anything else lands in the pool the first time a
+    batch decodes it, so steady state converges to zero host decode either
+    way.
+
+    Each entry keeps the host numpy copy alongside the device buffer: the
+    scheduler's block-max skip search reads seed *values* on host, and a
+    D2H sync per seed would serialize the very pipeline the pool feeds.
+    """
+
+    def __init__(self, capacity_ints: int = 1 << 26):
+        self.capacity = capacity_ints
+        self._store: OrderedDict = OrderedDict()
+        self._pad_rows: dict[tuple, jnp.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+        self.staged_lists = 0
+        self.staged_ints = 0
+        self.evicted_lists = 0
+        self.evicted_ints = 0
+        self.resident_ints = 0
+
+    # -- staging -----------------------------------------------------------
+
+    def _evict(self):
+        while self.resident_ints > self.capacity and len(self._store) > 1:
+            _, old = self._store.popitem(last=False)
+            self.evicted_lists += 1
+            self.evicted_ints += old["ints"]
+            self.resident_ints -= old["ints"]
+
+    def stage(self, key, vals_np: np.ndarray, n: int,
+              dev: jnp.ndarray | None = None):
+        """Stage one padded decoded list; ``dev`` reuses an already-staged
+        device buffer instead of a second H2D transfer."""
+        if key in self._store:
+            self._store.move_to_end(key)
+            return self._store[key]
+        entry = {"dev": jax.device_put(vals_np) if dev is None else dev,
+                 "np": vals_np, "n": n,
+                 "pads": {}, "ints": int(vals_np.shape[0])}
+        self._store[key] = entry
+        self.staged_lists += 1
+        self.staged_ints += entry["ints"]
+        self.resident_ints += entry["ints"]
+        self._evict()
+        return entry
+
+    def stage_bitmap(self, key, words_np: np.ndarray) -> jnp.ndarray:
+        """Stage one bitmap term's word row (key should carry a 'bm' tag to
+        keep it disjoint from decoded-list keys)."""
+        entry = self._store.get(key)
+        if entry is None:
+            entry = {"dev": jax.device_put(words_np), "np": words_np,
+                     "n": int(words_np.shape[0]), "pads": {},
+                     "ints": int(words_np.shape[0])}
+            self._store[key] = entry
+            self.staged_lists += 1
+            self.staged_ints += entry["ints"]
+            self.resident_ints += entry["ints"]
+            self._evict()
+        else:
+            self._store.move_to_end(key)
+        return entry["dev"]
+
+    # -- lookup ------------------------------------------------------------
+
+    def get(self, key):
+        """(device vals, host vals, n) or None — counts hit/miss."""
+        entry = self._store.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._store.move_to_end(key)
+        return entry["dev"], entry["np"], entry["n"]
+
+    def __contains__(self, key) -> bool:
+        return key in self._store        # residency peek: no counters
+
+    def padded(self, src: DecodedSource, size: int) -> jnp.ndarray:
+        """Device row of ``src`` SENTINEL-padded to ``size`` (a group's fold
+        bucket).  Memoized per (entry, size); survives eviction races by
+        falling back to an eager device pad of the source's own buffer."""
+        base = src.vals
+        if base.shape[0] == size:
+            return base
+        entry = self._store.get(src.key) if src.key else None
+        if entry is not None and entry["dev"] is base:
+            dev = entry["pads"].get(size)
+            if dev is None:
+                grown = entry["ints"] + size
+                dev = jax.device_put(its.pad_to(entry["np"], size))
+                entry["pads"][size] = dev
+                self.staged_ints += size
+                self.resident_ints += size
+                entry["ints"] = grown
+                self._evict()
+            return dev
+        return jnp.concatenate(
+            [base, jnp.full((size - base.shape[0],), its.SENTINEL,
+                            jnp.int32)])
+
+    def sentinel_row(self, size: int) -> jnp.ndarray:
+        """All-SENTINEL device row (inactive fold / padded batch slots)."""
+        row = self._pad_rows.get(("sent", size))
+        if row is None:
+            row = jax.device_put(np.full(size, its.SENTINEL, np.int32))
+            self._pad_rows[("sent", size)] = row
+        return row
+
+    def ones_row(self, words: int) -> jnp.ndarray:
+        """All-ones bitmap row — the probe/AND identity."""
+        row = self._pad_rows.get(("ones", words))
+        if row is None:
+            row = jax.device_put(np.full(words, 0xFFFFFFFF, np.uint32))
+            self._pad_rows[("ones", words)] = row
+        return row
+
+    def zeros_row(self, words: int) -> jnp.ndarray:
+        """All-zero bitmap row — padded batch slots (popcount 0)."""
+        row = self._pad_rows.get(("zero", words))
+        if row is None:
+            row = jax.device_put(np.zeros(words, np.uint32))
+            self._pad_rows[("zero", words)] = row
+        return row
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def warm(self, index, stats: dict | None = None) -> dict:
+        """Stage the whole index per the resolve policy: bitmaps and
+        decode-policy lists go resident decoded; skip-capable long lists
+        stay compressed (their memory story *is* the skip index) and only
+        warm their self-padded layout projection."""
+        from repro.core import codecs as codec_lib
+        codec = codec_lib.get_codec(index.codec_name)
+        for part in index.parts:
+            for tid, tp in part.terms.items():
+                if tp.kind == "bitmap":
+                    self.stage_bitmap(("bm", part.uid, tid),
+                                      np.asarray(tp.payload))
+                elif tp.kind == "list":
+                    if (bitpack.skip_capable(tp.payload) and
+                            int(tp.payload.widths.shape[0])
+                            >= SKIP_MIN_BLOCKS):
+                        continue                 # serves packed: stay compressed
+                    vals, n = decode_padded_np(codec, tp)
+                    _bump(stats, "decoded_ints",
+                          decoded_ints_of(tp.payload))
+                    self.stage((part.uid, tid), vals, n)
+        precompute_layouts(index.parts, stats)
+        return self.stats()
+
+    def stats(self) -> dict:
+        return {"resident_lists": len(self._store),
+                "resident_ints": self.resident_ints,
+                "staged_lists": self.staged_lists,
+                "staged_ints": self.staged_ints,
+                "evicted_lists": self.evicted_lists,
+                "evicted_ints": self.evicted_ints,
+                "hits": self.hits, "misses": self.misses}
+
+
 def resolve(part, tid: int, tp, codec, cache=None, r_count: int | None = None,
-            skip: bool = True, stats: dict | None = None):
+            skip: bool = True, stats: dict | None = None,
+            pool: ResidentPool | None = None):
     """Resolve one term posting to a DecodedSource or a PackedSource.
 
     r_count: current (or scheduled) candidate cardinality — None means this
     term *is* the candidate seed and must decode.  skip=False forces the
     decoded path everywhere (the pre-skip engine behavior, kept for A/B
-    benchmarking).
+    benchmarking).  pool: optional ResidentPool — residency wins like cache
+    residency does (an already-staged list is free to reuse), and fresh
+    decodes are staged so the next batch gathers instead of decoding.
     """
     key = (part.uid, tid)
     want_skip = (skip and r_count is not None
@@ -194,19 +446,33 @@ def resolve(part, tid: int, tp, codec, cache=None, r_count: int | None = None,
                  and tp.n / max(r_count, 1) > SKIP_MIN_RATIO
                  and int(tp.payload.widths.shape[0]) >= SKIP_MIN_BLOCKS)
     if want_skip:
-        # cache residency wins: an already-decoded list is free to reuse
+        # residency wins: an already-decoded list is free to reuse
         if cache is not None and key in cache:
             vals, n = cache.get(key)
-            return DecodedSource(vals, n)
+            return DecodedSource(vals, n, key=key)
+        if pool is not None and key in pool:
+            dev, vals_np, n = pool.get(key)
+            _bump(stats, "resident_hits")
+            return DecodedSource(dev, n, vals_np=vals_np, key=key)
         return PackedSource(tp.payload, tp.n,
                             maxes_np=np.asarray(tp.payload.maxes), key=key)
+    if pool is not None:
+        hit = pool.get(key)
+        if hit is not None:
+            _bump(stats, "resident_hits")
+            return DecodedSource(hit[0], hit[2], vals_np=hit[1], key=key)
     if cache is not None:
         hit = cache.get(key)
         if hit is not None:
-            return DecodedSource(hit[0], hit[1])
-    vals, n = decode_padded(codec, tp)
+            if pool is not None:          # promote: next batch gathers
+                pool.stage(key, np.asarray(hit[0]), hit[1], dev=hit[0])
+            return DecodedSource(hit[0], hit[1], key=key)
+    vals_np, n = decode_padded_np(codec, tp)
     _bump(stats, "decoded_ints", decoded_ints_of(tp.payload))
     _bump(stats, "decoded_lists")
+    vals = jnp.asarray(vals_np)
+    if pool is not None:
+        pool.stage(key, vals_np, n, dev=vals)
     if cache is not None:
         cache.put(key, vals, n)
-    return DecodedSource(vals, n)
+    return DecodedSource(vals, n, vals_np=vals_np, key=key)

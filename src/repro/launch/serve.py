@@ -3,13 +3,19 @@
   --arch paper-index : conjunctive query serving (the paper's system);
                        --batch N > 1 routes through the shape-bucketed
                        batched scheduler (repro.index.batch), --backend
-                       {jax,pallas} picks the intersect backend
+                       {jax,pallas} picks the intersect backend,
+                       --resident stages the device-resident index
+                       (source.ResidentPool), --pipeline D double-buffers
+                       batches at depth D with a per-stage timing breakdown
+                       (stage/dispatch/block; repro.index.pipeline)
   --arch <lm id>     : prefill + greedy decode on the smoke-reduced model
   --arch <recsys id> : batched scoring
 
   PYTHONPATH=src python -m repro.launch.serve --arch paper-index --queries 20
   PYTHONPATH=src python -m repro.launch.serve --arch paper-index \\
       --queries 256 --batch 64 --backend jax --cache --shared-vocab
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-index \\
+      --queries 256 --batch 32 --pipeline 2
 """
 
 from __future__ import annotations
@@ -25,50 +31,105 @@ from repro.configs.base import get_config
 
 
 def serve_index(args):
-    from repro.index import builder, corpus as corpus_lib, engine
+    from repro.index import builder, corpus as corpus_lib, engine, source
     corpus = corpus_lib.synthesize(n_docs=1 << 16, n_queries=args.queries,
                                    seed=5, shared_vocab=args.shared_vocab)
     idx = builder.build(corpus.postings, corpus.n_docs,
                         codec_name="fastpfor-d1", B=16, n_parts=2)
     queries = corpus.queries
     cache = engine.DecodeCache() if args.cache else None
+    if args.pipeline and args.batch <= 1:
+        args.batch = 32                 # pipelining is a batched mode
+    pool = None
+    if args.resident or args.pipeline:
+        pool = source.ResidentPool()
+        t0 = time.perf_counter()
+        pool.warm(idx)
+        ps = pool.stats()
+        print(f"[serve] resident index: staged {ps['staged_lists']} lists "
+              f"({ps['staged_ints']} ints) in {time.perf_counter() - t0:.2f}s")
 
     def cache_note():
-        if cache is None:
-            return ""
-        return f", cache hit rate {cache.hit_rate:.2f}"
+        note = ""
+        if cache is not None:
+            note += f", cache hit rate {cache.hit_rate:.2f}"
+        if pool is not None:
+            ps = pool.stats()
+            note += (f", pool {ps['resident_lists']} lists resident "
+                     f"({ps['evicted_lists']} evicted)")
+        return note
 
     if args.batch > 1:
         from repro.index import batch as batch_lib
+        from repro.index import pipeline as pipe_lib
 
-        def run_all():
-            out, stats = [], {}
-            for lo in range(0, len(queries), args.batch):
-                out.extend(batch_lib.execute_batch(
-                    idx, queries[lo: lo + args.batch],
-                    backend=args.backend, cache=cache, stats=stats))
+        depth = args.pipeline
+
+        def run_all(stats=None, timings=None):
+            stats = {} if stats is None else stats
+            if depth:
+                out = pipe_lib.execute_pipelined(
+                    idx, queries, batch_size=args.batch, depth=depth,
+                    backend=args.backend, cache=cache, pool=pool,
+                    stats=stats, timings=timings)
+            else:
+                out = []
+                for lo in range(0, len(queries), args.batch):
+                    out.extend(batch_lib.execute_batch(
+                        idx, queries[lo: lo + args.batch],
+                        backend=args.backend, cache=cache, pool=pool,
+                        stats=stats))
             return out, stats
 
-        run_all()                               # warm / compile
+        # Warm to steady state: cache fills / pool staging change how terms
+        # resolve between passes (decoded vs packed), which changes group
+        # signatures — so repeat until no new program signature appears,
+        # otherwise the timed loop pays compile on its first batches.
+        warm_stats: dict = {}
+        seen = -1
+        for _ in range(4):
+            run_all(stats=warm_stats)
+            n_sigs = len(warm_stats.get("signatures", ()))
+            if n_sigs == seen:
+                break
+            seen = n_sigs
+        timings = pipe_lib.StageTimings() if depth else None
         t0 = time.perf_counter()
-        results, stats = run_all()
+        results, stats = run_all(timings=timings)
         dt = time.perf_counter() - t0
         hits = sum(r.count for r in results)
-        print(f"[serve] paper-index --batch {args.batch} ({args.backend}): "
+        mode = (f"--pipeline {depth} (batch {args.batch})" if depth
+                else f"--batch {args.batch}")
+        print(f"[serve] paper-index {mode} ({args.backend}): "
               f"{len(queries)} queries, {len(queries) / dt:.1f} q/s "
               f"({dt / len(queries) * 1e3:.2f} ms/query), {hits} hits, "
               f"{stats['n_programs']} device programs, "
               f"{stats.get('decoded_ints', 0) / len(queries):.0f} "
               f"decoded ints/query "
-              f"({stats.get('skip_folds', 0)} skip folds), "
+              f"({stats.get('skip_folds', 0)} skip folds, "
+              f"{stats.get('resident_hits', 0)} resident hits), "
               f"{idx.stats()['bits_per_int']:.2f} bits/int"
               f"{cache_note()}")
+        if timings is not None:
+            tot = max(timings.stage + timings.dispatch + timings.block, 1e-9)
+            print(f"[serve]   pipeline depth {depth}: "
+                  f"stage {timings.stage * 1e3:.1f} ms "
+                  f"({timings.stage / tot:.0%}), "
+                  f"dispatch {timings.dispatch * 1e3:.1f} ms "
+                  f"({timings.dispatch / tot:.0%}), "
+                  f"block {timings.block * 1e3:.1f} ms "
+                  f"({timings.block / tot:.0%}) "
+                  f"over {timings.batches} batches")
         return
-    for q in queries:                       # warm / compile every signature
-        engine.query(idx, q, cache=cache)
+    # warm / compile every signature; two passes when residency (cache or
+    # pool) changes how terms resolve — steady state, not first-touch
+    for _ in range(2 if (cache is not None or pool is not None) else 1):
+        for q in queries:
+            engine.query(idx, q, cache=cache, pool=pool)
     stats: dict = {}
     t0 = time.perf_counter()
-    hits = sum(engine.query(idx, q, cache=cache, stats=stats).count
+    hits = sum(engine.query(idx, q, cache=cache, pool=pool,
+                            stats=stats).count
                for q in queries)
     dt = time.perf_counter() - t0
     print(f"[serve] paper-index: {len(queries)} queries, "
@@ -128,6 +189,15 @@ def main():
                     help="paper-index: >1 enables batched scheduler; "
                          "lm/recsys: batch size (default 4)")
     ap.add_argument("--backend", choices=["jax", "pallas"], default="jax")
+    ap.add_argument("--pipeline", type=int, default=0, metavar="DEPTH",
+                    help="paper-index: double-buffered pipelined serving "
+                         "with DEPTH batches in flight (implies the "
+                         "device-resident index and batched mode — batch "
+                         "size defaults to 32 unless --batch is given; "
+                         "0 = off)")
+    ap.add_argument("--resident", action="store_true",
+                    help="paper-index: stage the device-resident index "
+                         "(source.ResidentPool) before serving")
     ap.add_argument("--cache", action="store_true",
                     help="paper-index: serve with a DecodeCache and report "
                          "its hit rate")
