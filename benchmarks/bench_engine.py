@@ -1,5 +1,5 @@
 """Batched vs sequential query-engine throughput + partial-decode accounting
-(ISSUE 1 + ISSUE 2 + ISSUE 3 acceptance gates).
+(ISSUE 1 + ISSUE 2 + ISSUE 3 + ISSUE 4 acceptance gates).
 
 Replays a Table-2-shaped query log (2–5 terms, skewed per-position list
 lengths) through the sequential engine (one device dispatch per fold, host
@@ -29,6 +29,17 @@ path off vs on (``execute_batch(skip=...)``): the ISSUE 2 gate is a ≥ 5×
 drop while results stay byte-identical to the sequential engine on both
 backends.  This section runs pool-less on purpose — it gates the
 partial-decode machinery itself, which residency would mask.
+
+A fourth section measures the sharded fan-out (``repro.index.shard``,
+DESIGN.md §2.9) at shards ∈ {1, 2, 4} in a *device-compute-bound* regime
+(mid-size seeds, several long lists → large candidate-block partial
+decodes per row).  It runs in a subprocess under
+``--xla_force_host_platform_device_count=4`` so four host-platform devices
+exist on any machine while the parent — and every baseline above — stays
+single-device.  The ISSUE 4 gate is >1.5× batched throughput at 4 shards
+vs 1 in the full-size run (``sharded/speedup_s4`` in BENCH_engine.json);
+the smoke variant reports the same keys but is too small to gate on —
+scheduler-bound regimes measure the host, not the sharding.
 
 Derived column reports queries/sec (and decoded ints/query where that is
 the figure of merit).  CLI: ``--smoke`` runs the reduced sweep standalone
@@ -218,9 +229,103 @@ def _skewed(quick: bool) -> None:
     RESULTS["skewed/batched_pallas_qps"] = round(dt, 1)
 
 
+def _sharded_worker(quick: bool) -> None:
+    """Child-process body for the sharded section: measures batched
+    uncached throughput at shards ∈ {1, 2, 4} and prints one JSON line.
+    Runs under --xla_force_host_platform_device_count=4 (set by the
+    parent) so 4 host-platform devices exist regardless of machine."""
+    import time
+    import jax
+    from repro.index import builder, corpus as corpus_lib, engine, shard
+
+    # device-compute-heavy regime (mid-size seed, two long lists → large
+    # candidate-block partial decodes): the regime where the fan-out's
+    # SPMD row-split pays; host-bound regimes measure the scheduler, not
+    # the sharding
+    n_docs = 1 << 17 if quick else 1 << 18
+    n_queries = 32 if quick else 96
+    scale = n_docs / (1 << 18)
+    table = {4: (100.0, [4000.0 * scale, 60000.0 * scale,
+                         90000.0 * scale, 130000.0 * scale])}
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=11, table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="bp-d1", B=0, n_parts=4)
+    queries = corpus.queries
+    seq = [engine.query(idx, q) for q in queries]
+    results = {"sharded/devices": len(jax.devices())}
+    for n_shards in (1, 2, 4):
+        sharded = shard.shard_index(idx, n_shards)
+
+        def run_once():
+            return shard.execute_sharded(sharded, queries, batch_size=32,
+                                         depth=2)
+
+        out = run_once()
+        for a, b in zip(out, seq):              # byte-identical gate
+            assert a.count == b.count
+            import numpy as np
+            assert np.array_equal(a.docs, b.docs)
+        # warm to the signature fixed point before timing: arena growth
+        # and residency staging settle over the first passes
+        stats: dict = {}
+        seen = -1
+        for _ in range(4):
+            shard.execute_sharded(sharded, queries, batch_size=32, depth=2,
+                                  stats=stats)
+            n_sigs = len(stats.get("signatures", ()))
+            if n_sigs == seen:
+                break
+            seen = n_sigs
+        qps = _qps(run_once, len(queries), reps=5)
+        results[f"sharded/batched_b32_s{n_shards}_qps"] = round(qps, 1)
+    results["sharded/speedup_s4"] = round(
+        results["sharded/batched_b32_s4_qps"]
+        / results["sharded/batched_b32_s1_qps"], 2)
+    print("SHARDED_JSON " + json.dumps(results))
+
+
+def _sharded(quick: bool) -> None:
+    """Sharded fan-out scaling (ISSUE 4 gate: >1.5× batched throughput at
+    4 shards vs 1, uncached, on host-platform devices).  Runs in a
+    subprocess with forced host device count so the parent process's
+    single-device state — and every baseline above — is undisturbed."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, os.path.abspath(__file__), "--sharded-worker"]
+    if quick:
+        cmd.append("--smoke")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        print(f"# sharded section FAILED: {out.stderr[-2000:]}")
+        raise SystemExit(2)
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("SHARDED_JSON ")][-1]
+    results = json.loads(line[len("SHARDED_JSON "):])
+    RESULTS.update(results)
+    for n_shards in (1, 2, 4):
+        qps = results[f"sharded/batched_b32_s{n_shards}_qps"]
+        emit(f"engine/sharded/batched_b32_s{n_shards}", 1.0 / qps,
+             f"{qps:.1f} q/s "
+             f"{qps / results['sharded/batched_b32_s1_qps']:.2f}x")
+    emit("engine/sharded/speedup_s4", 0.0,
+         f"{results['sharded/speedup_s4']:.2f}x on "
+         f"{results['sharded/devices']} host devices")
+
+
 def run(quick: bool = False) -> None:
     _throughput(quick)
     _skewed(quick)
+    _sharded(quick)
 
 
 def compare(baseline_path: str, max_regress: float | None) -> int:
@@ -270,7 +375,12 @@ def main() -> None:
     ap.add_argument("--max-regress", type=float, default=None, metavar="PCT",
                     help="with --compare: fail (exit 2) if the b32 batched "
                          "speedup regressed more than PCT percent")
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)    # child of the sharded section
     args = ap.parse_args()
+    if args.sharded_worker:
+        _sharded_worker(args.smoke)
+        return
     print("name,us_per_call,derived")
     run(quick=args.smoke)
     if args.json:

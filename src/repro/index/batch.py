@@ -31,11 +31,31 @@ query *batches* inside the vectorized regime:
      sorted under ``compact``.  All-bitmap queries reduce to a batched AND
      + popcount.  Without a pool, stacking happens host-side in numpy (one
      device transfer per operand); with a ``source.ResidentPool`` the
-     operands are already device-resident and assembly is a pure gather —
-     one eager device stack of resident rows, no decode, no padding memcpy,
-     no H2D transfer (DESIGN.md §2.8).
+     operands are device-resident and each one assembles as a single
+     row-arena gather — no decode, no padding memcpy, no H2D transfer,
+     and no per-row dispatch cost (DESIGN.md §2.8).
   3. **Aggregate.** Per-item results are re-assembled per query in index-part
      order, matching the sequential engine byte for byte.
+
+This module is DESIGN.md §2.7 (scheduler + group-key scheme); §2.8 covers
+the resident/pipelined serving built on it and §2.9 the sharded fan-out.
+Invariants callers rely on:
+
+  * **Group-signature stability** — ``GroupKey`` describes operand
+    *shapes* only (pow2 buckets, block geometry, algorithm).  Residency,
+    arenas, caches, and sharding change where a row lives or which device
+    computes it, never its shape, so every serving mode compiles the same
+    per-signature programs and the compile count stays bounded.  The
+    sharded executor additionally relies on group programs being
+    row-independent (the only scanned axis is the fold axis), which is
+    what lets it split the row axis across devices unchanged.
+  * **Byte-identical aggregation** — per-query results concatenate in
+    part order (items carry their part ordinal; ``collect_batch`` sorts
+    by it), preserving global doc-id sortedness, so batched ==
+    pipelined == sharded == sequential, element for element.
+  * **Padding is inert** — padded batch rows, masked no-op folds,
+    identity bitmap rows, and all-pad packed layouts never contribute to
+    any active row's result.
 
 Launch and collect are split (``launch_groups`` dispatches every group
 program and returns a ``PendingBatch`` of un-materialized device results;
@@ -61,7 +81,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from functools import partial
+from functools import lru_cache, partial
 
 import numpy as np
 import jax
@@ -112,10 +132,28 @@ class _Item:
                                           # pool: J × DecodedSource
     psrc: list | None = None              # Jp × (layout, blk_p) — layout is
                                           # the self-padded np PackedLayout
-                                          # (host) or the group-padded device
-                                          # operand tuple (pool)
+                                          # (host) or the PackedSource
+                                          # itself (pool; arena-assembled)
     bm_words: np.ndarray | None = None    # host: (J_b, W) bitmap word rows
     bm_dev: list | None = None            # pool: J_b × (W,) resident rows
+    bm_keys: list | None = None           # pool: J_b × pool keys (arenas)
+    rsrc: object = None                   # pool: seed DecodedSource
+
+
+@lru_cache(maxsize=None)
+def _stacker(n: int):
+    """Jitted n-ary row stack.  ``jnp.stack`` on a list dispatches one
+    eager expand_dims per row — ~45µs each on a host backend, which made
+    operand assembly the dominant serving cost; a jitted stacker is one
+    dispatch for the whole stack (~8× cheaper at 128 rows).  Memoized per
+    arity; jit itself re-specializes per row shape/dtype, and with inputs
+    committed to one device the stack runs (and its result stays) there —
+    which is what keeps per-shard slices on their own devices."""
+    return jax.jit(lambda *xs: jnp.stack(xs))
+
+
+def _stack_rows(rows: list) -> jnp.ndarray:
+    return _stacker(len(rows))(*rows)
 
 
 def _bucket_rows(b: int) -> int:
@@ -145,9 +183,14 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
     carry host numpy arrays.  Everything downstream of this point is device
     programs over stacked operands."""
     codec = codec_lib.get_codec(index.codec_name)
+    # sharded serving hands in one device-pinned pool per part (an object
+    # with .for_part); plain serving hands in a single pool or None
+    pool_of = (pool.for_part if hasattr(pool, "for_part")
+               else (lambda pi: pool))
     groups: dict[GroupKey, list[_Item]] = defaultdict(list)
     for qi, term_ids in enumerate(queries):
         for pi, part in enumerate(index.parts):
+            pool = pool_of(pi)
             tps = [part.terms[t] for t in term_ids]
             if any(tp.kind == "empty" for tp in tps):
                 continue
@@ -157,18 +200,22 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
             bm_pairs = [(t, tp) for t, tp in zip(term_ids, tps)
                         if tp.kind == "bitmap"]
             W = len(bm_pairs[0][1].payload) if bm_pairs else 0
-            bm_words = bm_dev = None
+            bm_words = bm_dev = bm_keys = None
             if bm_pairs:
                 if pool is not None:
-                    bm_dev = [pool.stage_bitmap(("bm", part.uid, t),
-                                                np.asarray(tp.payload))
-                              for t, tp in bm_pairs]
+                    # (key, host row) pairs: the arena assembler must not
+                    # depend on store residency (tiny pools evict between
+                    # schedule and assembly)
+                    bm_keys = [(("bm", part.uid, t), np.asarray(tp.payload))
+                               for t, tp in bm_pairs]
+                    bm_dev = [pool.stage_bitmap(k, w) for k, w in bm_keys]
                 else:
                     bm_words = np.stack([tp.payload for _, tp in bm_pairs])
             if not pairs:
                 key = GroupKey("bitmap", 0, 0, W, "-")
                 groups[key].append(_Item(qi, pi, part.doc_lo,
-                                         bm_words=bm_words, bm_dev=bm_dev))
+                                         bm_words=bm_words, bm_dev=bm_dev,
+                                         bm_keys=bm_keys))
                 continue
             seed_t, seed_tp = pairs[0]
             seed = source.resolve(part, seed_t, seed_tp, codec, cache=cache,
@@ -216,9 +263,10 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
                 e_pad = its.pow2_bucket(e_max, floor=1) if e_max else 0
                 psig = (k_pad, t_pad, c_pad, e_pad, rows, mode)
                 if pool is not None:
-                    psrc = [(source.cached_layout_dev(
-                                s, (k_pad, t_pad, e_pad), stats),
-                             source.pad_block_ids(b, c_pad, k_pad))
+                    # keep the PackedSource itself: the arena assembler
+                    # materializes its group-padded layout rows on demand
+                    # (memoized host-side, one device matrix per operand)
+                    psrc = [(s, source.pad_block_ids(b, c_pad, k_pad))
                             for s, b in cand]
                 else:
                     # memoized at the payload's own pads; the stacker
@@ -240,8 +288,10 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
             algo = ("tiled" if N / M <= BATCH_TILED_MAX_RATIO else "gallop")
             key = GroupKey("svs", M, N, W, algo, psig)
             groups[key].append(_Item(qi, pi, part.doc_lo, r=r_op,
+                                     rsrc=seed if pool is not None else None,
                                      folds=folds, psrc=psrc,
-                                     bm_words=bm_words, bm_dev=bm_dev))
+                                     bm_words=bm_words, bm_dev=bm_dev,
+                                     bm_keys=bm_keys))
     return groups
 
 
@@ -308,16 +358,19 @@ def _bitmap_and_program(words):
     return out, counts
 
 
-def _stack_packed(key: GroupKey, items: list[_Item], Bp: int):
-    """Stack the per-item packed layouts into uniform (Jp, Bp, ...) device
+def _stack_packed(key: GroupKey, items: list[_Item], Bp: int,
+                  jp: int | None = None):
+    """Stack the per-item packed layouts into uniform (Jp, Bp, ...) numpy
     operands.  Layouts arrive self-padded (the memoized projection); each
     slot zero-extends into the group buckets — pad blocks have width 0 and
     in-bounds offsets, and block ids beyond the real count never appear in
     the candidate list, so the extension is never decoded.  Inactive (j, b)
     slots keep all-pad block ids (→ all-SENTINEL decode) and are
-    additionally masked by the active flags."""
+    additionally masked by the active flags.  Returns (six host operand
+    stacks, candidate block ids, active) — callers compose/upload."""
     k_pad, t_pad, c_pad, e_pad, rows, _ = key.packed
-    Jp = max(len(it.psrc) for it in items)
+    Jp = (max((len(it.psrc) for it in items), default=0)
+          if jp is None else jp)
     PW = np.zeros((Jp, Bp, t_pad, 128), np.uint32)
     PWid = np.zeros((Jp, Bp, k_pad), np.int32)
     POf = np.zeros((Jp, Bp, k_pad), np.int32)
@@ -339,53 +392,129 @@ def _stack_packed(key: GroupKey, items: list[_Item], Bp: int):
                 PEp[j, b, :E] = lay.exc_pos
                 PEa[j, b, :E] = lay.exc_add
             active[j, b] = True
-    pk = tuple(jnp.asarray(x) for x in (PW, PWid, POf, PMx, PBk, PEp, PEa))
-    return pk, jnp.asarray(active)
+    return [PW, PWid, POf, PMx, PEp, PEa], PBk, active
 
 
-def _stack_packed_dev(key: GroupKey, items: list[_Item], Bp: int):
-    """Pool-mode packed stacking: gather the memoized group-padded device
-    layout operands of every (j, b) slot into (Jp, Bp, ...) stacks — one
-    eager device stack per operand, no host padding or word transfer (only
-    the tiny per-query candidate block ids cross to the device)."""
+# Arena gather: 2 arguments per assembled operand regardless of row count
+# (the whole point of RowArena — see source.py); executes on the arena
+# buffer's device, so per-shard slices stay on their shard's device.
+_GATHER = jax.jit(lambda buf, idx: buf[idx])
+
+
+def _stack_packed_arena(key: GroupKey, items: list[_Item], Bp: int,
+                        pool: "source.ResidentPool",
+                        jp: int | None = None):
+    """Pool-mode packed stacking: gather each of the six layout operands
+    from its RowArena with one (Jp·Bp,) index vector — slot 0 is the
+    all-pad layout, so inactive grid positions decode to SENTINEL exactly
+    like the host-stacked path.  Only the per-query candidate block ids
+    cross to the device.  Returns (six device operand stacks, candidate
+    block ids, active)."""
     k_pad, t_pad, c_pad, e_pad, rows, _ = key.packed
-    Jp = max(len(it.psrc) for it in items)
-    pad_lay = source.pad_layout_dev((k_pad, t_pad, e_pad))
-    ops = [[] for _ in range(6)]
+    pads = (k_pad, t_pad, e_pad)
+    Jp = (max((len(it.psrc) for it in items), default=0)
+          if jp is None else jp)
+    arenas = [pool.layout_arena(pads, o) for o in range(6)]
+    idx = np.zeros((Jp, Bp), np.int32)          # 0 = all-pad layout slot
     PBk = np.full((Jp, Bp, c_pad), k_pad, np.int32)
     active = np.zeros((Jp, Bp), bool)
-    for j in range(Jp):
-        for b in range(Bp):
-            it = items[b] if b < len(items) else None
-            if it is not None and j < len(it.psrc):
-                lay, blk_p = it.psrc[j]
-                PBk[j, b] = blk_p
-                active[j, b] = True
-            else:
-                lay = pad_lay
-            for o in range(6):
-                ops[o].append(lay[o])
-    stacked = [jnp.stack(rows).reshape((Jp, Bp) + rows[0].shape)
-               for rows in ops]
-    pk = (stacked[0], stacked[1], stacked[2], stacked[3],
-          jnp.asarray(PBk), stacked[4], stacked[5])
-    return pk, jnp.asarray(active)
+    for b, it in enumerate(items):
+        for j, (src, blk_p) in enumerate(it.psrc):
+            slot = arenas[0].slots.get(src.key)
+            if slot is None:
+                lay = source.cached_layout_np(src, pads)
+                ops = (lay.words, lay.widths, lay.offsets, lay.maxes,
+                       lay.exc_pos, lay.exc_add)
+                for a, row in zip(arenas, ops):
+                    slot = a.slot(src.key, lambda r=row: np.asarray(r))
+            idx[j, b] = slot
+            PBk[j, b] = blk_p
+            active[j, b] = True
+    gidx = jnp.asarray(idx.reshape(-1))
+    stacked = [_GATHER(a.buffer(), gidx).reshape(
+                   (Jp, Bp) + a.rows_np[0].shape)
+               for a in arenas]
+    return stacked, PBk, active
+
+
+def _compose_pk(stacked, PBk):
+    """Order the packed program operand tuple from six stacked arrays +
+    candidate block ids (device or host; the jit call uploads host parts)."""
+    return (stacked[0], stacked[1], stacked[2], stacked[3],
+            jnp.asarray(PBk), stacked[4], stacked[5])
+
+
+def _n_bitmaps(it: _Item) -> int:
+    return (it.bm_words.shape[0] if it.bm_words is not None
+            else len(it.bm_dev) if it.bm_dev is not None else 0)
+
+
+def _arena_ok(items: list[_Item]) -> bool:
+    """Arena assembly needs a host copy + identity key for every value row;
+    cache-hit sources carry neither (their numpy copy was dropped at cache
+    fill), so groups containing them fall back to the row-stack path."""
+    for it in items:
+        if it.rsrc is None or it.rsrc.vals_np is None or not it.rsrc.key:
+            return False
+        for f in it.folds:
+            if f.vals_np is None or not f.key:
+                return False
+    return True
 
 
 def _assemble_svs(key: GroupKey, items: list[_Item],
-                  pool: "source.ResidentPool | None"):
-    """Build the device operands of one svs group chunk.  Host mode stacks
-    numpy and pays one H2D per operand; pool mode gathers resident rows."""
+                  pool: "source.ResidentPool | None", *,
+                  bp: int | None = None, j: int | None = None,
+                  jb: int | None = None, jp: int | None = None):
+    """Build the operands of one svs group chunk.  Host mode stacks numpy
+    and pays one H2D per operand; pool mode gathers resident rows (committed
+    to the pool's device).  ``bp``/``j``/``jb``/``jp`` override the
+    chunk-derived paddings so the sharded executor can assemble uniform
+    per-shard slices (``repro.index.shard``); None derives them from the
+    items — the single-device path, unchanged."""
     B = len(items)
-    Bp = _bucket_rows(B)
-    J = max(len(it.folds) for it in items)
-    Jb = max((it.bm_words.shape[0] if it.bm_words is not None
-              else len(it.bm_dev) if it.bm_dev is not None else 0)
-             for it in items)
+    Bp = _bucket_rows(B) if bp is None else bp
+    J = (max((len(it.folds) for it in items), default=0)
+         if j is None else j)
+    Jb = (max((_n_bitmaps(it) for it in items), default=0)
+          if jb is None else jb)
     active = np.zeros((J, Bp), dtype=bool)
-    if pool is not None:
-        R = jnp.stack([it.r for it in items]
-                      + [pool.sentinel_row(key.m_bucket)] * (Bp - B))
+    if pool is not None and _arena_ok(items):
+        # arena fast path: one gather per operand (DESIGN.md §2.8/§2.9)
+        fa_m = pool.fold_arena(key.m_bucket)
+        ridx = np.zeros(Bp, np.int32)               # 0 = sentinel row
+        for b, it in enumerate(items):
+            ridx[b] = fa_m.slot(
+                it.rsrc.key,
+                lambda s=it.rsrc: _extend_np(s.vals_np, key.m_bucket))
+        R = _GATHER(fa_m.buffer(), jnp.asarray(ridx))
+        if J:
+            fa_n = pool.fold_arena(key.n_bucket)
+            fidx = np.zeros((J, Bp), np.int32)
+            for b, it in enumerate(items):
+                for jj, f in enumerate(it.folds):
+                    fidx[jj, b] = fa_n.slot(
+                        f.key,
+                        lambda s=f: _extend_np(s.vals_np, key.n_bucket))
+                    active[jj, b] = True
+            F = _GATHER(fa_n.buffer(),
+                        jnp.asarray(fidx.reshape(-1))
+                        ).reshape(J, Bp, key.n_bucket)
+        else:
+            F = jnp.zeros((0, Bp, key.n_bucket), jnp.int32)
+        W = None
+        if Jb:
+            wa = pool.bitmap_arena(key.words)
+            widx = np.zeros((Jb, Bp), np.int32)     # 0 = probe identity
+            for b, it in enumerate(items):
+                for jj, (bk, wnp) in enumerate(it.bm_keys or ()):
+                    widx[jj, b] = wa.slot(bk, lambda w=wnp: w)
+            W = _GATHER(wa.buffer(),
+                        jnp.asarray(widx.reshape(-1))
+                        ).reshape(Jb, Bp, key.words)
+    elif pool is not None:
+        R = _stack_rows([it.r for it in items]
+                        + [pool.sentinel_row(key.m_bucket)] * (Bp - B))
         rows = []
         for j in range(J):
             for b in range(Bp):
@@ -395,7 +524,7 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
                     active[j, b] = True
                 else:
                     rows.append(pool.sentinel_row(key.n_bucket))
-        F = (jnp.stack(rows).reshape(J, Bp, key.n_bucket) if J
+        F = (_stack_rows(rows).reshape(J, Bp, key.n_bucket) if J
              else jnp.zeros((0, Bp, key.n_bucket), jnp.int32))
         W = None
         if Jb:
@@ -408,7 +537,7 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
                     else:
                         # inactive slots are all-ones — the probe identity
                         wrows.append(pool.ones_row(key.words))
-            W = jnp.stack(wrows).reshape(Jb, Bp, key.words)
+            W = _stack_rows(wrows).reshape(Jb, Bp, key.words)
     else:
         Rnp = np.full((Bp, key.m_bucket), its.SENTINEL, dtype=np.int32)
         for b, it in enumerate(items):
@@ -429,13 +558,13 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
                     for j in range(it.bm_words.shape[0]):
                         Wnp[j, b] = it.bm_words[j]
             W = jnp.asarray(Wnp)
-    pk = pk_active = None
+    pkparts = None
     if key.packed is not None:
         if pool is not None:
-            pk, pk_active = _stack_packed_dev(key, items, Bp)
+            pkparts = _stack_packed_arena(key, items, Bp, pool, jp=jp)
         else:
-            pk, pk_active = _stack_packed(key, items, Bp)
-    return R, F, jnp.asarray(active), pk, pk_active, W, Bp, J, Jb
+            pkparts = _stack_packed(key, items, Bp, jp=jp)
+    return R, F, active, pkparts, W, Bp, J, Jb
 
 
 def _launch_svs_group(key: GroupKey, items: list[_Item], backend: str,
@@ -444,23 +573,43 @@ def _launch_svs_group(key: GroupKey, items: list[_Item], backend: str,
     results (vals, counts).  The batch dimension is bucketed (sentinel-
     padded rows, results sliced back at collect time) so the compile count
     stays bounded by the signature space."""
-    R, F, active, pk, pk_active, W, Bp, J, Jb = _assemble_svs(key, items, pool)
+    R, F, active, pkparts, W, Bp, J, Jb = _assemble_svs(key, items, pool)
+    pk = pk_active = None
+    if pkparts is not None:
+        stacked, PBk, pk_act = pkparts
+        pk = _compose_pk(stacked, PBk)
+        pk_active = jnp.asarray(pk_act)
     mode, rows = "d1", 32
     if key.packed is not None:
         rows, mode = key.packed[4], key.packed[5]
     if stats is not None:
         stats.setdefault("signatures", set()).add(("svs", key, Bp, J, Jb))
-    return _svs_program(R, F, active, pk, pk_active, W,
+    return _svs_program(R, F, jnp.asarray(active), pk, pk_active, W,
                         key.algo, backend, mode, rows)
 
 
-def _launch_bitmap_group(key: GroupKey, items: list[_Item], pool,
-                         stats: dict | None):
+def _assemble_bitmap(key: GroupKey, items: list[_Item], pool, *,
+                     bp: int | None = None, j: int | None = None):
+    """Stacked (Bp, J, W) word rows of one all-bitmap group chunk (device
+    array in pool mode, host numpy otherwise).  ``bp``/``j`` override the
+    chunk-derived paddings for sharded per-shard slices."""
     B = len(items)
-    Bp = _bucket_rows(B)
-    J = max((it.bm_words.shape[0] if it.bm_words is not None
-             else len(it.bm_dev)) for it in items)
-    if pool is not None:
+    Bp = _bucket_rows(B) if bp is None else bp
+    J = (max((_n_bitmaps(it) for it in items), default=1)
+         if j is None else j)
+    if pool is not None and all(it.bm_keys is not None for it in items):
+        # arena fast path: missing terms of real rows gather the all-ones
+        # AND identity (slot 0); padded batch rows gather all-zero (slot 1)
+        wa = pool.bitmap_arena(key.words)
+        widx = np.zeros((Bp, J), np.int32)
+        widx[B:, :] = source.ResidentPool.BM_ZERO_SLOT
+        for b, it in enumerate(items):
+            for jj, (bk, wnp) in enumerate(it.bm_keys):
+                widx[b, jj] = wa.slot(bk, lambda w=wnp: w)
+        words = _GATHER(wa.buffer(),
+                        jnp.asarray(widx.reshape(-1))
+                        ).reshape(Bp, J, key.words)
+    elif pool is not None:
         rows = []
         for b in range(Bp):
             it = items[b] if b < B else None
@@ -471,7 +620,7 @@ def _launch_bitmap_group(key: GroupKey, items: list[_Item], pool,
                     rows.append(pool.ones_row(key.words))   # AND identity
                 else:
                     rows.append(pool.zeros_row(key.words))  # popcount 0
-        words = jnp.stack(rows).reshape(Bp, J, key.words)
+        words = _stack_rows(rows).reshape(Bp, J, key.words)
     else:
         # real rows pad missing terms with all-ones (AND identity); padded
         # batch rows stay all-zero so their popcount is 0
@@ -480,6 +629,12 @@ def _launch_bitmap_group(key: GroupKey, items: list[_Item], pool,
             wnp[b] = 0xFFFFFFFF
             wnp[b, : it.bm_words.shape[0]] = it.bm_words
         words = jnp.asarray(wnp)
+    return words, Bp, J
+
+
+def _launch_bitmap_group(key: GroupKey, items: list[_Item], pool,
+                         stats: dict | None):
+    words, Bp, J = _assemble_bitmap(key, items, pool)
     if stats is not None:
         stats.setdefault("signatures", set()).add(("bm", key, Bp, J))
     return _bitmap_and_program(words)
@@ -544,14 +699,20 @@ def launch_groups(groups: dict[GroupKey, list[_Item]], *, n_queries: int,
                                                  stats)
             launched.append((key, chunk, vals, counts))
             n_programs += 1
-    if stats is not None:
-        # accumulate (like the decoded_ints/skip_folds counters) so one
-        # stats dict can span a chunked run of many batches
-        for k, v in (("n_groups", len(groups)), ("n_programs", n_programs),
-                     ("n_items", sum(len(v) for v in groups.values()))):
-            stats[k] = stats.get(k, 0) + v
+    accumulate_launch_stats(stats, groups, n_programs)
     return PendingBatch(n_queries=n_queries, max_results=max_results,
                         launched=launched, stats=stats)
+
+
+def accumulate_launch_stats(stats: dict | None, groups, n_programs: int):
+    """Accumulate per-launch counters (like the decoded_ints/skip_folds
+    counters) so one stats dict can span a chunked run of many batches —
+    shared by the single-device and sharded launchers."""
+    if stats is None:
+        return
+    for k, v in (("n_groups", len(groups)), ("n_programs", n_programs),
+                 ("n_items", sum(len(v) for v in groups.values()))):
+        stats[k] = stats.get(k, 0) + v
 
 
 def collect_batch(pending: PendingBatch) -> list[QueryResult]:
@@ -564,6 +725,8 @@ def collect_batch(pending: PendingBatch) -> list[QueryResult]:
         vals = np.asarray(vals_dev)
         cnts = np.asarray(counts_dev)
         for b, it in enumerate(chunk):
+            if it is None:          # padded slot (sharded shard-slice pad)
+                continue
             cnt = int(cnts[b])
             counts[it.qi] += cnt
             if not cnt:

@@ -106,3 +106,25 @@ def build(postings: list[np.ndarray], n_docs: int, codec_name: str = "bp-d1",
         from repro.index import source
         source.precompute_layouts(parts)
     return HybridIndex(n_docs=n_docs, B=B, codec_name=codec_name, parts=parts)
+
+
+def build_sharded(postings: list[np.ndarray], n_docs: int, *, n_shards: int,
+                  codec_name: str = "bp-d1", B: int = 0,
+                  n_parts: int | None = None, keep_raw: bool = False,
+                  varint_tail_below: int = 1024,
+                  capacity_ints: int = 1 << 26, warm: bool = True):
+    """Per-part build placed onto data-parallel shards (DESIGN.md §2.5).
+
+    Builds ``n_parts`` doc-id-range parts (default ``n_shards`` — the 1:1
+    part↔shard mapping the paper's partitioning suggests at cluster scale)
+    and returns a ``repro.index.shard.ShardedIndex`` carrying the
+    part→shard→device placement map, with each shard's working set staged
+    on its own device when ``warm``."""
+    if n_parts is None:
+        n_parts = n_shards
+    idx = build(postings, n_docs, codec_name=codec_name, B=B,
+                n_parts=n_parts, keep_raw=keep_raw,
+                varint_tail_below=varint_tail_below)
+    from repro.index import shard as shard_lib
+    return shard_lib.shard_index(idx, n_shards, capacity_ints=capacity_ints,
+                                 warm=warm)

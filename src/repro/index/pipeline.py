@@ -31,6 +31,21 @@ Per-stage wall time is accounted into ``StageTimings``:
 
 ``serve.py --pipeline N`` reports the breakdown; ``block`` collapsing
 toward zero at depth ≥ 2 is the visible signature of a hidden device.
+
+This module is DESIGN.md §2.8 (the pipelined half); the sharded executor
+(DESIGN.md §2.9, ``repro.index.shard``) reuses this exact loop through the
+``schedule_fn``/``launch_fn`` hooks, fanning each launch across the shard
+devices while in-flight tracking, depth bounding, and stage accounting
+stay shared.  Invariants callers rely on:
+
+  * **Byte-identical to the unpipelined path** — mutations of shared
+    state (pool staging, cache fills, layout memo, arena growth) happen
+    in schedule order, so results equal ``execute_batch`` run chunk by
+    chunk, and therefore ``engine.query`` per query, at every depth.
+  * **Depth bounds memory** — at most ``depth`` un-collected batches pin
+    operand/result buffers; depth 1 is strictly serial.
+  * **Collect order is submission order** — results return in query
+    order regardless of which device finished first.
 """
 
 from __future__ import annotations
@@ -63,13 +78,31 @@ def execute_pipelined(index: HybridIndex, queries: list[list[int]], *,
                       max_group_size: int = batch_lib.MAX_GROUP_SIZE,
                       cache=None, skip: bool = True, pool=None,
                       stats: dict | None = None,
-                      timings: StageTimings | None = None
+                      timings: StageTimings | None = None,
+                      schedule_fn=None, launch_fn=None
                       ) -> list[QueryResult]:
     """Answer ``queries`` in ``batch_size`` chunks with up to ``depth``
     batches in flight; results are byte-identical to ``execute_batch`` run
-    chunk by chunk (and therefore to ``engine.query`` per query)."""
+    chunk by chunk (and therefore to ``engine.query`` per query).
+
+    ``schedule_fn(chunk, stats) -> groups`` and ``launch_fn(groups,
+    n_queries, stats) -> PendingBatch`` override the two pipeline stages —
+    the sharded executor (``repro.index.shard``, DESIGN.md §2.9) plugs in
+    per-shard group assembly and fan-out dispatch here while reusing this
+    loop's in-flight tracking and stage accounting unchanged.  Defaults are
+    the single-device ``batch`` scheduler/launcher."""
     assert depth >= 1, depth
     assert batch_size >= 1, batch_size
+    if schedule_fn is None:
+        def schedule_fn(chunk, stats):
+            return batch_lib.schedule(index, chunk, cache=cache, skip=skip,
+                                      stats=stats, pool=pool)
+    if launch_fn is None:
+        def launch_fn(groups, n_queries, stats):
+            return batch_lib.launch_groups(
+                groups, n_queries=n_queries, backend=backend,
+                max_results=max_results, max_group_size=max_group_size,
+                pool=pool, stats=stats)
     inflight: deque[batch_lib.PendingBatch] = deque()
     out: list[QueryResult] = []
 
@@ -82,13 +115,9 @@ def execute_pipelined(index: HybridIndex, queries: list[list[int]], *,
     for lo in range(0, len(queries), batch_size):
         chunk = queries[lo: lo + batch_size]
         t0 = time.perf_counter()
-        groups = batch_lib.schedule(index, chunk, cache=cache, skip=skip,
-                                    stats=stats, pool=pool)
+        groups = schedule_fn(chunk, stats)
         t1 = time.perf_counter()
-        pending = batch_lib.launch_groups(
-            groups, n_queries=len(chunk), backend=backend,
-            max_results=max_results, max_group_size=max_group_size,
-            pool=pool, stats=stats)
+        pending = launch_fn(groups, len(chunk), stats)
         t2 = time.perf_counter()
         if timings is not None:
             timings.stage += t1 - t0

@@ -29,6 +29,23 @@ layout operands — staged on device with explicit ``jax.device_put`` and
 LRU eviction accounting, so steady-state batch assembly is pure
 index-gathering over resident buffers instead of per-batch decode + pow2
 padding + H2D transfer.
+
+Invariants callers rely on:
+
+  * **Residency wins in resolve** — a list already staged in the pool (or
+    the DecodeCache) is served decoded even when the ratio policy would
+    skip-probe it; fresh decodes are staged so the next batch gathers
+    instead of decoding.  Residency never changes *values*, only where a
+    row lives, so engines stay byte-identical with and without a pool.
+  * **Device pinning (DESIGN.md §2.5/§2.9)** — a pool constructed with
+    ``device=`` commits every buffer it stages to that device, and the
+    layout memo keeps per-device copies of packed layout operands.  This is
+    what places each index shard's working set on its own device in the
+    sharded executor (``repro.index.shard``); ``device=None`` keeps today's
+    single-device behavior byte for byte.
+  * **Host copies are kept** — schedulers read seed values and block-max
+    indexes on host; pool entries always carry the numpy copy so no D2H
+    sync lands on the query path.
 """
 
 from __future__ import annotations
@@ -145,7 +162,7 @@ def _layout_entry(src: PackedSource, pads: tuple, stats: dict | None = None):
     entry = _LAYOUT_CACHE.get(key)
     if entry is None:
         _bump(stats, "layout_misses")
-        entry = {"np": src.layout(*pads), "dev": None}
+        entry = {"np": src.layout(*pads), "dev": {}}
         _LAYOUT_CACHE[key] = entry
         _layout_cache_size += _layout_ints(pads)
         while (_layout_cache_size > _LAYOUT_CACHE_BUDGET
@@ -165,41 +182,20 @@ def cached_layout_np(src: PackedSource, pads: tuple,
 
 
 def cached_layout_dev(src: PackedSource, pads: tuple,
-                      stats: dict | None = None) -> tuple:
+                      stats: dict | None = None, device=None) -> tuple:
     """Memoized device-resident layout operands (sequential probe and the
     pool-resident batch stacks): (words, widths, offsets, maxes, exc_pos,
-    exc_add) jnp arrays."""
+    exc_add) jnp arrays.  ``device`` pins the copy to one device (sharded
+    serving keeps one copy per owning shard; None = default placement)."""
     entry = _layout_entry(src, pads, stats)
-    if entry["dev"] is None:
+    dev = entry["dev"].get(device)
+    if dev is None:
         lay = entry["np"]
-        entry["dev"] = tuple(jax.device_put(x) for x in (
+        dev = tuple(jax.device_put(x, device) for x in (
             lay.words, lay.widths, lay.offsets, lay.maxes,
             lay.exc_pos, lay.exc_add))
-    return entry["dev"]
-
-
-# Inactive packed fold slots in a device-stacked group need all-pad layout
-# rows (width-0 blocks, in-bounds offsets, dropped exceptions) — memoized
-# per pads since every group of that signature reuses the same rows.
-_PAD_LAYOUTS: dict[tuple, tuple] = {}
-
-
-def pad_layout_dev(pads: tuple) -> tuple:
-    """Device operands of an all-pad (inactive) layout slot for ``pads`` =
-    (k_pad, t_pad, e_pad): decodes to all-SENTINEL under the candidate mask
-    because its block ids are never listed as candidates."""
-    entry = _PAD_LAYOUTS.get(pads)
-    if entry is None:
-        k_pad, t_pad, e_pad = pads
-        entry = tuple(jax.device_put(x) for x in (
-            np.zeros((t_pad, bitpack.LANES), np.uint32),
-            np.zeros(k_pad, np.int32),
-            np.zeros(k_pad, np.int32),
-            np.zeros(k_pad, np.uint32),
-            np.full(e_pad, -1, np.int32),
-            np.zeros(e_pad, np.uint32)))
-        _PAD_LAYOUTS[pads] = entry
-    return entry
+        entry["dev"][device] = dev
+    return dev
 
 
 def precompute_layouts(parts, stats: dict | None = None) -> int:
@@ -256,6 +252,55 @@ def _bump(stats, key, by=1):
 # device-resident operand pool (DESIGN.md §2.8)
 # --------------------------------------------------------------------------
 
+class RowArena:
+    """Same-shape resident rows packed into ONE device matrix, so a group's
+    operand assembly is a single ``buffer[idx]`` gather instead of an n-ary
+    stack.  Why: jit dispatch costs ~60µs *per argument* on the host
+    backend, so stacking hundreds of row references per batch was the
+    dominant serving cost — a gather is 2 arguments regardless of row count
+    (DESIGN.md §2.8/§2.9).
+
+    Identity rows (sentinel / all-ones / all-zero / pad-layout) occupy the
+    first slots so padded and inactive grid positions gather them by
+    construction.  The buffer is rebuilt lazily (host ``np.stack`` + one
+    ``device_put``) when new rows joined since the last build — steady
+    state rebuilds nothing, and the warm-up rebuild cost is absorbed by
+    the warm passes every serving/bench loop already runs.  The buffer's
+    row count is padded to a pow2 capacity (filler = the identity row, a
+    slot id no index ever takes) so its *shape* changes only O(log rows)
+    times — the gather program recompiles per buffer shape, not per added
+    row.  Rows are keyed by the same (part.uid, tid) identity the pool
+    uses; an arena never evicts (it is bounded by the decode-policy
+    working set, same as ``warm``)."""
+
+    def __init__(self, identities: list, device=None):
+        self.rows_np: list = list(identities)
+        self.slots: dict = {}
+        self.device = device
+        self._buf = None
+
+    def slot(self, key, make_np) -> int:
+        s = self.slots.get(key)
+        if s is None:
+            s = len(self.rows_np)
+            self.rows_np.append(make_np())
+            self.slots[key] = s
+            self._buf = None
+        return s
+
+    @property
+    def ints(self) -> int:
+        return len(self.rows_np) * int(np.prod(self.rows_np[0].shape))
+
+    def buffer(self):
+        if self._buf is None:
+            cap = 1
+            while cap < len(self.rows_np):
+                cap <<= 1
+            rows = self.rows_np + [self.rows_np[0]] * (cap - len(self.rows_np))
+            self._buf = jax.device_put(np.stack(rows), self.device)
+        return self._buf
+
 class ResidentPool:
     """Device-resident index operands: decoded value rows and bitmap word
     rows staged once with explicit ``jax.device_put`` and reused by every
@@ -273,12 +318,20 @@ class ResidentPool:
     Each entry keeps the host numpy copy alongside the device buffer: the
     scheduler's block-max skip search reads seed *values* on host, and a
     D2H sync per seed would serialize the very pipeline the pool feeds.
+
+    ``device`` pins every staged buffer to one device — the sharded
+    executor (DESIGN.md §2.5/§2.9) gives each index shard a pool pinned to
+    its own device so the shard's whole working set lives where its slice
+    of the batch executes.  ``device=None`` is the default placement
+    (single-device serving, unchanged).
     """
 
-    def __init__(self, capacity_ints: int = 1 << 26):
+    def __init__(self, capacity_ints: int = 1 << 26, device=None):
         self.capacity = capacity_ints
+        self.device = device
         self._store: OrderedDict = OrderedDict()
         self._pad_rows: dict[tuple, jnp.ndarray] = {}
+        self._arenas: dict[tuple, RowArena] = {}
         self.hits = 0
         self.misses = 0
         self.staged_lists = 0
@@ -299,12 +352,16 @@ class ResidentPool:
     def stage(self, key, vals_np: np.ndarray, n: int,
               dev: jnp.ndarray | None = None):
         """Stage one padded decoded list; ``dev`` reuses an already-staged
-        device buffer instead of a second H2D transfer."""
+        device buffer instead of a second H2D transfer (re-pinned if this
+        pool is bound to a device and the buffer lives elsewhere)."""
         if key in self._store:
             self._store.move_to_end(key)
             return self._store[key]
-        entry = {"dev": jax.device_put(vals_np) if dev is None else dev,
-                 "np": vals_np, "n": n,
+        if dev is None:
+            dev = jax.device_put(vals_np, self.device)
+        elif self.device is not None and self.device not in dev.devices():
+            dev = jax.device_put(dev, self.device)
+        entry = {"dev": dev, "np": vals_np, "n": n,
                  "pads": {}, "ints": int(vals_np.shape[0])}
         self._store[key] = entry
         self.staged_lists += 1
@@ -318,7 +375,8 @@ class ResidentPool:
         keep it disjoint from decoded-list keys)."""
         entry = self._store.get(key)
         if entry is None:
-            entry = {"dev": jax.device_put(words_np), "np": words_np,
+            entry = {"dev": jax.device_put(words_np, self.device),
+                     "np": words_np,
                      "n": int(words_np.shape[0]), "pads": {},
                      "ints": int(words_np.shape[0])}
             self._store[key] = entry
@@ -357,7 +415,8 @@ class ResidentPool:
             dev = entry["pads"].get(size)
             if dev is None:
                 grown = entry["ints"] + size
-                dev = jax.device_put(its.pad_to(entry["np"], size))
+                dev = jax.device_put(its.pad_to(entry["np"], size),
+                                     self.device)
                 entry["pads"][size] = dev
                 self.staged_ints += size
                 self.resident_ints += size
@@ -372,7 +431,8 @@ class ResidentPool:
         """All-SENTINEL device row (inactive fold / padded batch slots)."""
         row = self._pad_rows.get(("sent", size))
         if row is None:
-            row = jax.device_put(np.full(size, its.SENTINEL, np.int32))
+            row = jax.device_put(np.full(size, its.SENTINEL, np.int32),
+                                 self.device)
             self._pad_rows[("sent", size)] = row
         return row
 
@@ -380,7 +440,8 @@ class ResidentPool:
         """All-ones bitmap row — the probe/AND identity."""
         row = self._pad_rows.get(("ones", words))
         if row is None:
-            row = jax.device_put(np.full(words, 0xFFFFFFFF, np.uint32))
+            row = jax.device_put(np.full(words, 0xFFFFFFFF, np.uint32),
+                                 self.device)
             self._pad_rows[("ones", words)] = row
         return row
 
@@ -388,9 +449,58 @@ class ResidentPool:
         """All-zero bitmap row — padded batch slots (popcount 0)."""
         row = self._pad_rows.get(("zero", words))
         if row is None:
-            row = jax.device_put(np.zeros(words, np.uint32))
+            row = jax.device_put(np.zeros(words, np.uint32), self.device)
             self._pad_rows[("zero", words)] = row
         return row
+
+    # -- arenas (gather-based group assembly; DESIGN.md §2.8/§2.9) ---------
+
+    # identity-slot layout shared with the batch assembler:
+    #   fold arenas:   slot 0 = all-SENTINEL row
+    #   bitmap arenas: slot 0 = all-ones (probe/AND identity),
+    #                  slot 1 = all-zero (padded batch rows, popcount 0)
+    FOLD_PAD_SLOT = 0
+    BM_ONES_SLOT = 0
+    BM_ZERO_SLOT = 1
+
+    def fold_arena(self, size: int) -> RowArena:
+        """Arena of SENTINEL-padded int32 value rows of length ``size``."""
+        a = self._arenas.get(("fold", size))
+        if a is None:
+            a = RowArena([np.full(size, its.SENTINEL, np.int32)],
+                         device=self.device)
+            self._arenas[("fold", size)] = a
+        return a
+
+    def bitmap_arena(self, words: int) -> RowArena:
+        a = self._arenas.get(("bm", words))
+        if a is None:
+            a = RowArena([np.full(words, 0xFFFFFFFF, np.uint32),
+                          np.zeros(words, np.uint32)], device=self.device)
+            self._arenas[("bm", words)] = a
+        return a
+
+    def layout_arena(self, pads: tuple, op: int) -> RowArena:
+        """Arena of packed-layout operand ``op`` (word rows, widths,
+        offsets, maxes, exc_pos, exc_add — the _compose_pk order minus the
+        candidate block ids) at group pads; slot 0 is the all-pad layout
+        whose blocks are never candidates."""
+        a = self._arenas.get(("lay", pads, op))
+        if a is None:
+            k_pad, t_pad, e_pad = pads
+            idn = (np.zeros((t_pad, bitpack.LANES), np.uint32),
+                   np.zeros(k_pad, np.int32),
+                   np.zeros(k_pad, np.int32),
+                   np.zeros(k_pad, np.uint32),
+                   np.full(e_pad, -1, np.int32),
+                   np.zeros(e_pad, np.uint32))[op]
+            a = RowArena([idn], device=self.device)
+            self._arenas[("lay", pads, op)] = a
+        return a
+
+    def arena_stats(self) -> dict:
+        return {"arenas": len(self._arenas),
+                "arena_ints": sum(a.ints for a in self._arenas.values())}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -425,7 +535,8 @@ class ResidentPool:
                 "staged_ints": self.staged_ints,
                 "evicted_lists": self.evicted_lists,
                 "evicted_ints": self.evicted_ints,
-                "hits": self.hits, "misses": self.misses}
+                "hits": self.hits, "misses": self.misses,
+                **self.arena_stats()}
 
 
 def resolve(part, tid: int, tp, codec, cache=None, r_count: int | None = None,
@@ -470,9 +581,12 @@ def resolve(part, tid: int, tp, codec, cache=None, r_count: int | None = None,
     vals_np, n = decode_padded_np(codec, tp)
     _bump(stats, "decoded_ints", decoded_ints_of(tp.payload))
     _bump(stats, "decoded_lists")
-    vals = jnp.asarray(vals_np)
     if pool is not None:
-        pool.stage(key, vals_np, n, dev=vals)
+        # stage first so the buffer lands on the pool's device (sharded
+        # pools are device-pinned) and the source serves the staged copy
+        vals = pool.stage(key, vals_np, n)["dev"]
+    else:
+        vals = jnp.asarray(vals_np)
     if cache is not None:
         cache.put(key, vals, n)
     return DecodedSource(vals, n, vals_np=vals_np, key=key)

@@ -1,20 +1,37 @@
-"""Production mesh construction (DESIGN.md §4).
+"""Production mesh construction (DESIGN.md §4, §2.5).
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state.  The dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import;
 tests and benchmarks see the real single device.
+
+AxisType compatibility: newer jax exposes ``jax.sharding.AxisType`` and
+``jax.make_mesh(..., axis_types=...)``; the pinned jax 0.4.37 has
+``jax.make_mesh`` but no AxisType.  Mesh construction therefore only passes
+``axis_types`` when the running jax provides it — every mesh here is
+Auto-typed anyway, which is exactly what an axis-type-free mesh means, so
+the two paths are semantically identical.  This is what lets the sharded
+index executor (``repro.index.shard``) and the multi-device tests run under
+``--xla_force_host_platform_device_count`` on the pinned jax.
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax >= 0.6
+    from jax.sharding import AxisType as _AxisType
+except ImportError:                     # pinned jax 0.4.37: Auto is implicit
+    _AxisType = None
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,3 +44,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices tests have."""
     return _mk((data, model), ("data", "model"))
+
+
+def make_index_mesh(n_devices: int | None = None):
+    """1-D ('data',) mesh for sharded index serving (DESIGN.md §2.5/§2.9).
+
+    Index parts shard along 'data' only — there is no model axis in the
+    query engine — so this is a plain ``Mesh`` over the first ``n_devices``
+    local devices (all of them by default).  Uses the raw Mesh constructor,
+    not ``jax.make_mesh``, so the device order is exactly ``jax.devices()``
+    order: the shard→device placement map stays the identity and is easy to
+    audit (``ShardedIndex.placement``)."""
+    devs = jax.devices()
+    if n_devices is None:
+        n_devices = len(devs)
+    assert 1 <= n_devices <= len(devs), (n_devices, len(devs))
+    return jax.sharding.Mesh(np.array(devs[:n_devices]), ("data",))

@@ -34,6 +34,8 @@ def serve_index(args):
     from repro.index import builder, corpus as corpus_lib, engine, source
     corpus = corpus_lib.synthesize(n_docs=1 << 16, n_queries=args.queries,
                                    seed=5, shared_vocab=args.shared_vocab)
+    if args.shards:
+        return serve_index_sharded(args, corpus)
     idx = builder.build(corpus.postings, corpus.n_docs,
                         codec_name="fastpfor-d1", B=16, n_parts=2)
     queries = corpus.queries
@@ -141,6 +143,72 @@ def serve_index(args):
           f"{cache_note()}")
 
 
+def serve_index_sharded(args, corpus):
+    """--shards N: multi-device fan-out serving (repro.index.shard).
+
+    Each index part's working set is pinned to its shard's device; batches
+    fan out to all shards in one SPMD dispatch and per-part hits
+    concatenate in part order — byte-identical to single-device serving.
+    Run under XLA_FLAGS=--xla_force_host_platform_device_count=N to get N
+    host-platform devices on CPU-only machines (must be set before jax
+    initializes; with fewer devices, shards share them contiguously)."""
+    from repro.index import builder, pipeline as pipe_lib, shard as shard_lib
+    if args.cache:
+        # per-shard device residency (ResidentPool) supersedes the decode
+        # cache: every decoded row is already staged on its shard's device
+        print("[serve] note: --cache has no effect with --shards "
+              "(per-shard device residency supersedes it)")
+    t0 = time.perf_counter()
+    sharded = builder.build_sharded(
+        corpus.postings, corpus.n_docs, n_shards=args.shards,
+        codec_name="fastpfor-d1", B=16,
+        n_parts=max(args.shards, 2))
+    st = sharded.stats()
+    print(f"[serve] sharded index: {st['n_shards']} shards on "
+          f"{st['n_devices']} devices, warmed in "
+          f"{time.perf_counter() - t0:.2f}s")
+    for s in st["shards"]:
+        print(f"[serve]   shard {s['shard']} -> {s['device']}: "
+              f"parts {s['parts']}, {s['resident_lists']} lists "
+              f"({s['resident_ints']} ints) resident")
+    queries = corpus.queries
+    batch = args.batch if args.batch > 1 else 32
+    depth = args.pipeline or 2
+
+    def run_all(stats=None, timings=None):
+        return shard_lib.execute_sharded(
+            sharded, queries, batch_size=batch, depth=depth,
+            backend=args.backend, stats=stats, timings=timings)
+
+    # warm to signature fixed point (same rationale as the batched path)
+    warm_stats: dict = {}
+    seen = -1
+    for _ in range(4):
+        run_all(stats=warm_stats)
+        n_sigs = len(warm_stats.get("signatures", ()))
+        if n_sigs == seen:
+            break
+        seen = n_sigs
+    timings = pipe_lib.StageTimings()
+    stats: dict = {}
+    t0 = time.perf_counter()
+    results = run_all(stats=stats, timings=timings)
+    dt = time.perf_counter() - t0
+    hits = sum(r.count for r in results)
+    print(f"[serve] paper-index --shards {args.shards} "
+          f"(batch {batch}, depth {depth}, {args.backend}): "
+          f"{len(queries)} queries, {len(queries) / dt:.1f} q/s "
+          f"({dt / len(queries) * 1e3:.2f} ms/query), {hits} hits, "
+          f"{stats['n_programs']} device programs")
+    tot = max(timings.stage + timings.dispatch + timings.block, 1e-9)
+    print(f"[serve]   stage {timings.stage * 1e3:.1f} ms "
+          f"({timings.stage / tot:.0%}), "
+          f"dispatch {timings.dispatch * 1e3:.1f} ms "
+          f"({timings.dispatch / tot:.0%}), "
+          f"block {timings.block * 1e3:.1f} ms ({timings.block / tot:.0%})")
+    return results
+
+
 def serve_lm(args, spec):
     from repro.models.transformer import init_params
     from repro.serve.steps import greedy_generate
@@ -195,6 +263,12 @@ def main():
                          "device-resident index and batched mode — batch "
                          "size defaults to 32 unless --batch is given; "
                          "0 = off)")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="paper-index: serve the index sharded across N "
+                         "data-parallel device shards (implies batched + "
+                         "pipelined + resident; run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N for N "
+                         "host devices; 0 = off)")
     ap.add_argument("--resident", action="store_true",
                     help="paper-index: stage the device-resident index "
                          "(source.ResidentPool) before serving")

@@ -1,0 +1,220 @@
+"""Differential coverage for the sharded query fan-out (ISSUE 4;
+DESIGN.md §2.5/§2.9).
+
+Sharded execution must be *byte-identical* to the sequential engine at
+every shard count, on both intersect backends, for both corpus shapes —
+sharding changes where rows live and which device intersects them, never
+what any row computes.  These tests run on whatever devices the host
+offers: with one device all shards share it (the dataflow is identical);
+CI additionally runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the placement
+tests see real multi-device meshes.
+
+Layers:
+  * sharded == sequential on {jax, pallas} × {uniform, skewed} at
+    shards ∈ {1, 2, 4},
+  * empty-part / single-part / empty-batch edges,
+  * placement-map accounting: contiguous part→shard cover, device-pinned
+    pools, per-shard resident staging, more-shards-than-devices folding.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.index import builder, corpus as corpus_lib, engine, shard, source
+
+pytestmark = pytest.mark.shard
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+# --------------------------------------------------------------------------
+# fixtures
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def uniform():
+    """Table-2-shaped corpus with bitmaps and 4 parts (1:1 at 4 shards)."""
+    corpus = corpus_lib.synthesize(n_docs=1 << 14, n_queries=10, seed=33)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=4)
+    seq = [engine.query(idx, q) for q in corpus.queries]
+    return idx, corpus.queries, seq
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    """Tiny seed + very long second term: packed (skip-aware partial
+    decode) folds flow through the sharded assembly."""
+    n_docs = 1 << 16
+    table = {2: (100.0, [0.8 * (1 << 18) / n_docs,
+                         38000.0 * (1 << 18) / n_docs])}
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=4, seed=7,
+                                   table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="bp8-d1", B=0, n_parts=4)
+    seq = [engine.query(idx, q) for q in corpus.queries]
+    return idx, corpus.queries, seq
+
+
+def _assert_identical(results, seq):
+    assert len(results) == len(seq)
+    for got, want in zip(results, seq):
+        assert got.count == want.count
+        assert got.docs.dtype == want.docs.dtype
+        assert np.array_equal(got.docs, want.docs)      # byte-identical
+
+
+# --------------------------------------------------------------------------
+# sharded == sequential differential matrix
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_sharded_matches_sequential_uniform(uniform, n_shards, backend):
+    idx, queries, seq = uniform
+    sharded = shard.shard_index(idx, n_shards)
+    out = shard.execute_sharded(sharded, queries, batch_size=4, depth=2,
+                                backend=backend)
+    _assert_identical(out, seq)
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_sharded_matches_sequential_skewed(skewed, n_shards, backend):
+    idx, queries, seq = skewed
+    sharded = shard.shard_index(idx, n_shards)
+    out = shard.execute_sharded(sharded, queries, batch_size=2, depth=2,
+                                backend=backend)
+    _assert_identical(out, seq)
+
+
+def test_sharded_matches_at_depth_one(uniform):
+    """depth=1 (strictly serial pipeline) — same results, fewer overlaps."""
+    idx, queries, seq = uniform
+    sharded = shard.shard_index(idx, 4)
+    out = shard.execute_sharded(sharded, queries, batch_size=4, depth=1)
+    _assert_identical(out, seq)
+
+
+def test_shards_4_match_shards_1(uniform):
+    """The serve.py --shards acceptance shape: 4-shard output equals
+    1-shard output element for element (both equal the engine)."""
+    idx, queries, _ = uniform
+    one = shard.execute_sharded(shard.shard_index(idx, 1), queries,
+                                batch_size=4)
+    four = shard.execute_sharded(shard.shard_index(idx, 4), queries,
+                                 batch_size=4)
+    _assert_identical(four, one)
+
+
+# --------------------------------------------------------------------------
+# edges
+# --------------------------------------------------------------------------
+
+def test_sharded_empty_batch(uniform):
+    idx, _, _ = uniform
+    sharded = shard.shard_index(idx, 2)
+    assert shard.execute_sharded(sharded, [], batch_size=8) == []
+
+
+def test_sharded_single_query(uniform):
+    idx, queries, seq = uniform
+    sharded = shard.shard_index(idx, 4)
+    out = shard.execute_sharded(sharded, [queries[0]], batch_size=8)
+    _assert_identical(out, seq[:1])
+
+
+def test_single_part_many_shards():
+    """n_parts < n_shards: trailing shards own no parts and contribute
+    all-inactive rows; results still byte-identical."""
+    corpus = corpus_lib.synthesize(n_docs=1 << 13, n_queries=6, seed=5)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=1)
+    seq = [engine.query(idx, q) for q in corpus.queries]
+    sharded = shard.shard_index(idx, 4)
+    owners = {s for s in sharded.part_shard}
+    assert owners == {0}                     # the single part lives on shard 0
+    out = shard.execute_sharded(sharded, corpus.queries, batch_size=4)
+    _assert_identical(out, seq)
+
+
+def test_empty_part_term():
+    """A term with no postings in some doc range yields an 'empty' posting
+    in that part; queries touching it skip the part on every shard —
+    exactly like the sequential engine."""
+    rng = np.random.default_rng(3)
+    n_docs = 1 << 13
+    lo_only = np.sort(rng.choice(n_docs // 4, 300, replace=False))   # part 0
+    spread = np.sort(rng.choice(n_docs, 2000, replace=False))
+    idx = builder.build([lo_only, spread], n_docs,
+                        codec_name="fastpfor-d1", B=0, n_parts=4)
+    q = [0, 1]
+    seq = engine.query(idx, q)
+    sharded = shard.shard_index(idx, 4)
+    out = shard.execute_sharded(sharded, [q], batch_size=2)
+    _assert_identical(out, [seq])
+
+
+# --------------------------------------------------------------------------
+# placement-map accounting
+# --------------------------------------------------------------------------
+
+def test_placement_map_contiguous_cover(uniform):
+    idx, _, _ = uniform
+    for n_shards in SHARD_COUNTS:
+        sharded = shard.shard_index(idx, n_shards, warm=False)
+        ps = sharded.part_shard
+        assert len(ps) == len(idx.parts)
+        assert ps == sorted(ps)                          # contiguous ranges
+        assert set(ps) <= set(range(n_shards))
+        assert ps[0] == 0 and ps[-1] == n_shards - 1 or n_shards == 1
+
+
+def test_pools_pinned_to_placement(uniform):
+    idx, _, _ = uniform
+    sharded = shard.shard_index(idx, 4, warm=False)
+    assert len(sharded.pools) == 4
+    for pool, dev in zip(sharded.pools, sharded.placement):
+        assert isinstance(pool, source.ResidentPool)
+        assert pool.device is dev
+    # shards fold contiguously onto however many devices exist
+    ndev = len(sharded.devices)
+    assert 4 % ndev == 0
+    per = 4 // ndev
+    for s, dev in enumerate(sharded.placement):
+        assert dev is sharded.devices[s // per]
+
+
+def test_warm_stages_per_shard(uniform):
+    idx, queries, seq = uniform
+    sharded = shard.shard_index(idx, 4)          # warm=True default
+    st = sharded.stats()
+    assert st["n_shards"] == 4
+    assert [s["parts"] for s in st["shards"]] == [[0], [1], [2], [3]]
+    for s in st["shards"]:
+        assert s["resident_lists"] > 0           # every shard staged its part
+        assert s["resident_ints"] > 0
+    # staged buffers really live on the placement device
+    pool = sharded.pools[-1]
+    key = next(iter(pool._store))
+    assert sharded.placement[-1] in pool._store[key]["dev"].devices()
+    # steady state: a second pass decodes nothing
+    shard.execute_sharded(sharded, queries, batch_size=4)
+    stats: dict = {}
+    out = shard.execute_sharded(sharded, queries, batch_size=4, stats=stats)
+    _assert_identical(out, seq)
+    assert stats.get("decoded_lists", 0) == 0
+
+
+def test_sharded_skip_folds_still_fire(skewed):
+    """Long skip-capable lists stay compressed per shard: the packed
+    partial-decode path runs inside the sharded program too."""
+    idx, queries, seq = skewed
+    sharded = shard.shard_index(idx, 2)
+    stats: dict = {}
+    out = shard.execute_sharded(sharded, queries, batch_size=2, stats=stats)
+    _assert_identical(out, seq)
+    assert stats.get("skip_folds", 0) > 0
