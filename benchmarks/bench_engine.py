@@ -21,7 +21,13 @@ several batch sizes.  Two regimes, as in the paper:
 Both regimes cover the pallas backend at b32, and the pipelined executor
 (depth 2) is asserted byte-identical to the sequential engine on both
 backends before it is timed (ISSUE 3 gate: uncached/batched_b32_qps ≥ 1.5×
-the PR-2 baseline of 258.6).
+the PR-2 baseline of 258.6).  Caveat on the pallas columns since ISSUE 5:
+this container runs the kernels in *interpret mode*, whose cost scales
+with the number of interpreted kernel-grid invocations — megagroup fusion
+raises per-program padded shapes to family ceilings, so the interpreted
+columns drop even though results stay byte-identical; on real TPU
+hardware the padded lanes are vector work, not interpreter iterations.
+The jax-backend columns are the load-bearing throughput gates.
 
 A third section replays a *skewed-ratio* log (tiny first term, very long
 second term) and reports decoded-ints/query with the posting-source skip
@@ -41,15 +47,25 @@ vs 1 in the full-size run (``sharded/speedup_s4`` in BENCH_engine.json);
 the smoke variant reports the same keys but is too small to gate on —
 scheduler-bound regimes measure the host, not the sharding.
 
+A fifth section (``dispatch/``, ISSUE 5) A/Bs megagroup fusion on the
+mixed-signature corpus: device dispatches per batch fused vs unfused
+(gate: ≥ 4× reduction), the AOT warmup compile count, the steady-state
+compile count after warmup (must be 0), and the fused/unfused throughput
+delta with everything else held fixed.
+
 Derived column reports queries/sec (and decoded ints/query where that is
 the figure of merit).  CLI: ``--smoke`` runs the reduced sweep standalone
 (CI smoke gate), ``--json PATH`` additionally records a machine-readable
 baseline (BENCH_engine.json / BENCH_engine_smoke.json), ``--compare PATH``
-prints per-key deltas vs a committed baseline, and ``--max-regress PCT``
+prints per-key deltas vs a committed baseline, ``--max-regress PCT``
 turns the comparison into a CI gate: it fails if the batched-over-
 sequential *speedup* at b32 (cached regime) regressed by more than PCT —
 the ratio of two same-run numbers, so the gate tracks the engine, not the
-absolute speed of the runner it happens to execute on.
+absolute speed of the runner it happens to execute on.  ``--max-dispatches
+N`` gates the fused dispatches-per-batch count the same way (a regression
+back to per-signature dispatch fails fast), and ``--profile`` prints the
+per-batch schedule / assemble / dispatch / device breakdown of the fused
+resident pipeline.
 """
 
 from __future__ import annotations
@@ -110,9 +126,12 @@ def _throughput(quick: bool) -> None:
         emit(f"engine/{regime}/sequential", 1.0 / seq_qps,
              f"{seq_qps:.1f} q/s")
         RESULTS[f"{regime}/sequential_qps"] = round(seq_qps, 1)
-        # device-resident index: staged once (untimed — build-time work)
+        # device-resident index: staged once (untimed — build-time work);
+        # one sticky FusionPlan per regime so fused signatures converge
+        # across batch sizes and reps (the serving-session contract)
         pool = source.ResidentPool()
         pool.warm(idx)
+        plan = batch_lib.FusionPlan()
         for bs in batch_sizes:
             bat_cache = make_cache()
 
@@ -121,7 +140,7 @@ def _throughput(quick: bool) -> None:
                 for lo in range(0, len(queries), bs):
                     out.extend(batch_lib.execute_batch(
                         idx, queries[lo: lo + bs], cache=cache, pool=pool,
-                        backend=backend))
+                        backend=backend, plan=plan))
                 return out
 
             assert_identical(run_batched())
@@ -133,7 +152,7 @@ def _throughput(quick: bool) -> None:
             def run_pipelined(bs=bs, cache=bat_cache):
                 return pipe_lib.execute_pipelined(
                     idx, queries, batch_size=bs, depth=2, cache=cache,
-                    pool=pool)
+                    pool=pool, plan=plan)
 
             assert_identical(run_pipelined())
             qps = _qps(run_pipelined, len(queries))
@@ -151,7 +170,7 @@ def _throughput(quick: bool) -> None:
             for lo in range(0, len(queries), 32):
                 out.extend(batch_lib.execute_batch(
                     idx, queries[lo: lo + 32], cache=pal_cache, pool=pool,
-                    backend="pallas"))
+                    backend="pallas", plan=plan))
             return out
 
         assert_identical(run_pallas())
@@ -163,7 +182,7 @@ def _throughput(quick: bool) -> None:
         # backend too (timed pipelined coverage is the jax column above)
         assert_identical(pipe_lib.execute_pipelined(
             idx, queries, batch_size=32, depth=2, backend="pallas",
-            pool=pool))
+            pool=pool, plan=plan))
 
     # A/B reference: the pre-ISSUE-3 uncached path (per-batch host decode,
     # pow2 padding and H2D staging; no resident pool)
@@ -177,6 +196,104 @@ def _throughput(quick: bool) -> None:
     emit("engine/uncached/batched_b32_host_staged", 1.0 / qps,
          f"{qps:.1f} q/s")
     RESULTS["uncached/batched_b32_host_staged_qps"] = round(qps, 1)
+
+
+def _dispatch(quick: bool) -> None:
+    """Megagroup fusion A/B (ISSUE 5 gates): dispatches per mixed batch
+    fused vs unfused (gate: ≥ 4× reduction), AOT warmup compile count, and
+    the fused/unfused throughput delta on the device-resident path.
+    Identical batches, identical pool — only ``fuse`` flips."""
+    import numpy as np
+    from repro.index import builder, corpus as corpus_lib, engine, source
+    from repro.index import batch as batch_lib
+
+    table = {k: corpus_lib.TABLE2_CLUEWEB[k] for k in (2, 3, 4, 5)}
+    n_docs = 1 << 14 if quick else 1 << 16
+    n_queries = 32 if quick else 128
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=11, table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    queries = corpus.queries
+    seq = [engine.query(idx, q) for q in queries]
+    pool = source.ResidentPool()
+    pool.warm(idx)
+    plan = batch_lib.FusionPlan()
+    wu = batch_lib.warmup(idx, queries, plan=plan, batch_size=32, pool=pool)
+    RESULTS["dispatch/warmup_compiles"] = wu["n_compiles"]
+    RESULTS["dispatch/warmup_signatures"] = wu["n_signatures"]
+    n_batches = (len(queries) + 31) // 32
+    for fuse in (False, True):
+        label = "fused" if fuse else "unfused"
+
+        def run_once(fuse=fuse, stats=None):
+            out = []
+            for lo in range(0, len(queries), 32):
+                out.extend(batch_lib.execute_batch(
+                    idx, queries[lo: lo + 32], pool=pool, fuse=fuse,
+                    plan=plan if fuse else None, stats=stats))
+            return out
+
+        stats: dict = {}
+        out = run_once(stats=stats)
+        for a, b in zip(out, seq):              # byte-identical gate
+            assert a.count == b.count and np.array_equal(a.docs, b.docs)
+        per_batch = stats["n_dispatches"] / n_batches
+        RESULTS[f"dispatch/per_batch_{label}"] = round(per_batch, 2)
+        qps = _qps(run_once, len(queries))
+        RESULTS[f"dispatch/batched_b32_{label}_qps"] = round(qps, 1)
+        emit(f"engine/dispatch/batched_b32_{label}", 1.0 / qps,
+             f"{qps:.1f} q/s {per_batch:.1f} dispatches/batch")
+    RESULTS["dispatch/reduction"] = round(
+        RESULTS["dispatch/per_batch_unfused"]
+        / max(RESULTS["dispatch/per_batch_fused"], 1e-9), 1)
+    # after warmup + the loops above, steady-state fused serving must not
+    # compile anything new
+    run_stats: dict = {}
+    for lo in range(0, len(queries), 32):
+        batch_lib.execute_batch(idx, queries[lo: lo + 32], pool=pool,
+                                plan=plan, stats=run_stats)
+    RESULTS["dispatch/steady_compiles"] = run_stats.get("n_compiles", 0)
+    emit("engine/dispatch/reduction", 0.0,
+         f"{RESULTS['dispatch/reduction']:.1f}x fewer dispatches, "
+         f"{RESULTS['dispatch/steady_compiles']} steady-state compiles")
+
+
+def _profile(quick: bool) -> None:
+    """--profile: per-batch schedule / assemble / dispatch / device-block
+    breakdown of the resident fused pipeline, so the next PR can see where
+    the next bottleneck sits without re-instrumenting."""
+    from repro.index import builder, corpus as corpus_lib, source
+    from repro.index import batch as batch_lib
+    from repro.index import pipeline as pipe_lib
+
+    table = {k: corpus_lib.TABLE2_CLUEWEB[k] for k in (2, 3, 4, 5)}
+    n_docs = 1 << 14 if quick else 1 << 16
+    n_queries = 32 if quick else 128
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=11, table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    queries = corpus.queries
+    pool = source.ResidentPool()
+    pool.warm(idx)
+    plan = batch_lib.FusionPlan()
+    batch_lib.warmup(idx, queries, plan=plan, batch_size=32, pool=pool)
+    for fuse in (True, False):
+        tm = pipe_lib.StageTimings()
+        pipe_lib.execute_pipelined(idx, queries, batch_size=32, depth=2,
+                                   pool=pool, fuse=fuse,
+                                   plan=plan if fuse else None, timings=tm)
+        per = 1e3 / max(tm.batches, 1)
+        tot = max(tm.stage + tm.assemble + tm.dispatch + tm.block, 1e-9)
+        print(f"# profile {'fused' if fuse else 'unfused'} "
+              f"(per batch of 32): "
+              f"schedule {tm.stage * per:.2f}ms ({tm.stage / tot:.0%}), "
+              f"assemble {tm.assemble * per:.2f}ms "
+              f"({tm.assemble / tot:.0%}), "
+              f"dispatch {tm.dispatch * per:.2f}ms "
+              f"({tm.dispatch / tot:.0%}), "
+              f"device/block {tm.block * per:.2f}ms ({tm.block / tot:.0%})")
 
 
 def _skewed(quick: bool) -> None:
@@ -268,15 +385,10 @@ def _sharded_worker(quick: bool) -> None:
             assert np.array_equal(a.docs, b.docs)
         # warm to the signature fixed point before timing: arena growth
         # and residency staging settle over the first passes
-        stats: dict = {}
-        seen = -1
-        for _ in range(4):
-            shard.execute_sharded(sharded, queries, batch_size=32, depth=2,
-                                  stats=stats)
-            n_sigs = len(stats.get("signatures", ()))
-            if n_sigs == seen:
-                break
-            seen = n_sigs
+        from repro.index import batch as batch_lib
+        batch_lib.warm_to_fixed_point(
+            lambda s: shard.execute_sharded(sharded, queries, batch_size=32,
+                                            depth=2, stats=s))
         qps = _qps(run_once, len(queries), reps=5)
         results[f"sharded/batched_b32_s{n_shards}_qps"] = round(qps, 1)
     results["sharded/speedup_s4"] = round(
@@ -324,6 +436,7 @@ def _sharded(quick: bool) -> None:
 
 def run(quick: bool = False) -> None:
     _throughput(quick)
+    _dispatch(quick)
     _skewed(quick)
     _sharded(quick)
 
@@ -375,14 +488,40 @@ def main() -> None:
     ap.add_argument("--max-regress", type=float, default=None, metavar="PCT",
                     help="with --compare: fail (exit 2) if the b32 batched "
                          "speedup regressed more than PCT percent")
+    ap.add_argument("--max-dispatches", type=float, default=None,
+                    metavar="N",
+                    help="fail (exit 2) if the fused engine issues more "
+                         "than N device dispatches per mixed batch "
+                         "(dispatch/per_batch_fused) — guards against a "
+                         "regression back to per-signature dispatch")
+    ap.add_argument("--profile", action="store_true",
+                    help="print the per-batch schedule/assemble/dispatch/"
+                         "device breakdown of the fused resident pipeline "
+                         "and exit")
     ap.add_argument("--sharded-worker", action="store_true",
                     help=argparse.SUPPRESS)    # child of the sharded section
     args = ap.parse_args()
     if args.sharded_worker:
         _sharded_worker(args.smoke)
         return
+    if args.profile:
+        _profile(args.smoke)
+        return
     print("name,us_per_call,derived")
     run(quick=args.smoke)
+    # evaluate the dispatch gate but keep going: the JSON artifact and the
+    # --compare report must land even on a failure — they are exactly the
+    # data needed to debug it
+    rc = 0
+    if args.max_dispatches is not None:
+        per_batch = RESULTS.get("dispatch/per_batch_fused")
+        if per_batch is None or per_batch > args.max_dispatches:
+            print(f"# DISPATCH GATE FAILED: {per_batch} fused dispatches "
+                  f"per batch (ceiling {args.max_dispatches})")
+            rc = 2
+        else:
+            print(f"# dispatch gate passed: {per_batch} per batch "
+                  f"(ceiling {args.max_dispatches})")
     if args.json:
         payload = {
             "bench": "bench_engine",
@@ -394,7 +533,9 @@ def main() -> None:
             fh.write("\n")
         print(f"# wrote {args.json}")
     if args.compare:
-        sys.exit(compare(args.compare, args.max_regress))
+        rc = max(rc, compare(args.compare, args.max_regress))
+    if rc:
+        sys.exit(rc)
 
 
 if __name__ == "__main__":

@@ -165,10 +165,14 @@ def count_valid(r):
 
 
 def masked_svs_scan(r, folds, fold_active, intersect_fn):
-    """Shared SvS-fold scan body, parameterized over the intersect (jnp
-    gallop/tiled, the packed partial decode, or the Pallas kernels —
-    ``index/batch.py`` reuses this for every fold family so the
-    pass-through semantics live in one place).  ``folds`` may be a plain
+    """Compact-per-fold SvS scan body, parameterized over the intersect
+    (jnp gallop/tiled, the packed partial decode, or the Pallas kernels).
+    The batched engine's device programs now carry a validity *mask* over
+    the original sorted seed buffer instead of compacting between folds
+    (``index/batch.py::_mask_fold_scan``; compaction never shrank the
+    static shapes but its cumsum+scatter dominated the program) — this
+    compacting variant remains the core-layer reference for callers that
+    want dense candidate buffers between folds.  ``folds`` may be a plain
     (J, B, N) value stack or any pytree of (J, ...)-leading stacked
     operands (``lax.scan`` slices pytrees), e.g. the tuple of batch-uniform
     packed layout arrays.

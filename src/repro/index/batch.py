@@ -19,36 +19,66 @@ query *batches* inside the vectorized regime:
      bitmap rows (probe identities) — and the batch dimension is bucketed
      on a ×1.5 ladder, so the compile count stays O(log² n_docs · log B)
      overall.
-  2. **Execute.** Each group runs as a *single* device program: the batch of
-     shortest lists (B, M) is intersected with the stacked decoded fold
-     lists (J, B, N) by a ``lax.scan`` whose body is a vmapped intersect +
-     compact, then with the stacked *packed* folds (tuple of (Jp, B, ...)
-     layout arrays, each step a skip-aware partial decode of candidate
-     blocks only), then the surviving candidates are probed against the
-     stacked bitmap terms (J_b, B, W) — candidates never round-trip to host
-     between terms.  Fold order is decoded-then-packed, which is safe
-     because set intersection commutes and the candidate buffer stays
-     sorted under ``compact``.  All-bitmap queries reduce to a batched AND
-     + popcount.  Without a pool, stacking happens host-side in numpy (one
-     device transfer per operand); with a ``source.ResidentPool`` the
-     operands are device-resident and each one assembles as a single
-     row-arena gather — no decode, no padding memcpy, no H2D transfer,
-     and no per-row dispatch cost (DESIGN.md §2.8).
-  3. **Aggregate.** Per-item results are re-assembled per query in index-part
-     order, matching the sequential engine byte for byte.
+  2. **Fuse (megagroups).** A realistic mixed batch spans dozens of shape
+     signatures, and at ~60µs/arg of host jit-dispatch cost the *number of
+     device programs per batch* becomes the serving bottleneck once operand
+     assembly is arena-gathered (DESIGN.md §2.10).  ``fuse_groups``
+     therefore coarsens compatible GroupKeys into signature **families** —
+     same kind and packed block geometry; M/N/W/packed pads raised to the
+     family ceiling; fold/probe arity ceilings pow2-bucketed — and
+     concatenates their items along the batch-row axis, so one batch
+     launches O(#families) ≈ O(1) fused programs instead of one per
+     signature.  Fusion is sound because group programs are row-independent
+     and padding is inert (module invariants below): a row assembled into a
+     wider slot gathers sentinel/identity filler that never contributes to
+     its result.  Fused programs force ``algo="gallop"``: the coarsened
+     M/N make the tiled ratio rule meaningless, and the lock-step tile
+     walk loses its data-dependent early exit entirely at family ceilings
+     while galloping stays O(M log N) per row.  A sticky ``FusionPlan``
+     keeps family ceilings monotone across batches so fused signatures
+     converge, and ``warmup`` precompiles the family ladder ahead of the
+     first batch (AOT signature warmup — steady-state serving never
+     compiles).
+  3. **Execute.** Each (fused) group runs as a *single* device program: the
+     batch of shortest lists (B, M) is intersected with the stacked decoded
+     fold lists (J, B, N) by a ``lax.scan`` of vmapped intersects, then
+     with the stacked *packed* folds (tuple of (Jp, B, ...) layout arrays,
+     each step a skip-aware partial decode of candidate blocks only), then
+     the surviving candidates are probed against the stacked bitmap terms
+     (J_b, B, W) — candidates never round-trip to host between terms.
+     Every step ANDs its match mask into one running validity mask over the
+     *original* sorted seed buffer instead of compacting between folds:
+     compaction never shrank the (static) shapes, but its cumsum+scatter
+     was the single most expensive op in the program, and mask-folding is
+     what keeps the fused ceilings affordable.  Fold order is
+     decoded-then-packed, which is safe because set intersection commutes
+     and every mask is computed against the same sorted seed row.
+     All-bitmap queries reduce to a batched AND + popcount.  Without a
+     pool, stacking happens host-side in numpy (one device transfer per
+     operand); with a ``source.ResidentPool`` the operands are
+     device-resident and each one assembles as a single row-arena gather —
+     no decode, no padding memcpy, no H2D transfer, and no per-row
+     dispatch cost (DESIGN.md §2.8).
+  4. **Aggregate.** Per-item results are re-assembled per query in index-part
+     order, matching the sequential engine byte for byte.  Device results
+     arrive masked-but-uncompacted; the host extracts the valid (still
+     sorted) entries per row.
 
 This module is DESIGN.md §2.7 (scheduler + group-key scheme); §2.8 covers
-the resident/pipelined serving built on it and §2.9 the sharded fan-out.
-Invariants callers rely on:
+the resident/pipelined serving built on it, §2.9 the sharded fan-out, and
+§2.10 megagroup fusion + warmup.  Invariants callers rely on:
 
   * **Group-signature stability** — ``GroupKey`` describes operand
     *shapes* only (pow2 buckets, block geometry, algorithm).  Residency,
     arenas, caches, and sharding change where a row lives or which device
     computes it, never its shape, so every serving mode compiles the same
-    per-signature programs and the compile count stays bounded.  The
-    sharded executor additionally relies on group programs being
-    row-independent (the only scanned axis is the fold axis), which is
-    what lets it split the row axis across devices unchanged.
+    per-signature programs and the compile count stays bounded.  Fusion
+    preserves this: a fused key is just a GroupKey at family-ceiling
+    buckets, and the sticky ``FusionPlan`` makes those ceilings monotone
+    so fused signatures converge to a fixed point.  The sharded executor
+    additionally relies on group programs being row-independent (the only
+    scanned axis is the fold axis), which is what lets it split the row
+    axis across devices unchanged.
   * **Byte-identical aggregation** — per-query results concatenate in
     part order (items carry their part ordinal; ``collect_batch`` sorts
     by it), preserving global doc-id sortedness, so batched ==
@@ -70,7 +100,8 @@ Algorithm choice: under ``vmap`` the tiled merge runs lock-step across the
 batch — the slowest row sets the step count and its data-dependent early
 exit is lost — so the batched dispatcher biases much harder toward galloping
 than the sequential ratio rule (``BATCH_TILED_MAX_RATIO`` vs the paper's
-50×; re-derived in ``benchmarks/bench_engine.py``).
+50×; re-derived in ``benchmarks/bench_engine.py``), and fused megagroup
+programs force galloping outright (see ``fuse_groups``).
 
 Backends: ``backend="jax"`` uses the jnp searchsorted / tile-merge paths from
 ``core.intersect``; ``backend="pallas"`` routes every fold through the Pallas
@@ -80,6 +111,7 @@ galloping kernel (``kernels.ops.intersect_gallop_batch``).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict
 from functools import lru_cache, partial
 
@@ -113,13 +145,20 @@ class GroupKey:
     with masked no-op folds and all-ones bitmap rows (probe identities).
     Packed folds replace the fold-length bucket with their block-layout
     buckets: (k_pad blocks, t_pad word rows, c_pad candidate blocks,
-    e_pad exceptions, block_rows, delta mode)."""
+    e_pad exceptions, block_rows, delta mode).
+
+    ``fused`` is set only on megagroup keys produced by ``fuse_groups``:
+    the pow2-bucketed fold/probe arity ceilings — ('svs': (J, Jb, Jp),
+    'bitmap': (J,)) — which a fused program pins so its signature does not
+    drift with the arity mix of each batch.  Scheduled (unfused) keys
+    leave it None and derive arities from their items, as before."""
     kind: str              # 'svs' (≥1 list term) | 'bitmap' (all-bitmap)
     m_bucket: int          # candidate buffer length M
     n_bucket: int          # decoded fold-list pad length N
     words: int             # bitmap word count W (0 when no bitmaps)
     algo: str              # 'tiled' | 'gallop' | '-'
     packed: tuple | None = None   # (k_pad, t_pad, c_pad, e_pad, rows, mode)
+    fused: tuple | None = None    # megagroup arity ceilings (see above)
 
 
 @dataclasses.dataclass
@@ -130,14 +169,23 @@ class _Item:
     r: object = None                      # (M,) seed: np (host) | jnp (pool)
     folds: list | None = None             # host: J × (N,) np
                                           # pool: J × DecodedSource
-    psrc: list | None = None              # Jp × (layout, blk_p) — layout is
+    psrc: list | None = None              # Jp × (layout, blk) — layout is
                                           # the self-padded np PackedLayout
                                           # (host) or the PackedSource
-                                          # itself (pool; arena-assembled)
+                                          # itself (pool; arena-assembled);
+                                          # blk is the RAW candidate block
+                                          # id list (padded at stack time to
+                                          # the launching key's c_pad/k_pad,
+                                          # which fusion may have raised)
     bm_words: np.ndarray | None = None    # host: (J_b, W) bitmap word rows
     bm_dev: list | None = None            # pool: J_b × (W,) resident rows
     bm_keys: list | None = None           # pool: J_b × pool keys (arenas)
     rsrc: object = None                   # pool: seed DecodedSource
+
+
+# every jitted stacker ever created, so _compile_count can see their
+# caches too (the arena-fallback path compiles stack programs mid-serving)
+_STACKERS: list = []
 
 
 @lru_cache(maxsize=None)
@@ -149,7 +197,9 @@ def _stacker(n: int):
     arity; jit itself re-specializes per row shape/dtype, and with inputs
     committed to one device the stack runs (and its result stays) there —
     which is what keeps per-shard slices on their own devices."""
-    return jax.jit(lambda *xs: jnp.stack(xs))
+    fn = jax.jit(lambda *xs: jnp.stack(xs))
+    _STACKERS.append(fn)
+    return fn
 
 
 def _stack_rows(rows: list) -> jnp.ndarray:
@@ -169,6 +219,25 @@ def _bucket_rows(b: int) -> int:
 
 def _extend_np(vals: np.ndarray, size: int) -> np.ndarray:
     return vals if vals.shape[0] == size else its.pad_to(vals, size)
+
+
+def _extend_words(w: np.ndarray, size: int) -> np.ndarray:
+    """Zero-extend a bitmap word row to a (possibly fused) W bucket.  Zeros
+    are inert both ways: probes never index past the row's real doc span,
+    and the all-bitmap AND meets a zero extension on every real term, so
+    the popcount contribution is 0."""
+    if w.shape[0] == size:
+        return w
+    out = np.zeros(size, np.uint32)
+    out[: w.shape[0]] = w
+    return out
+
+
+def _extend_words_dev(row: jnp.ndarray, size: int) -> jnp.ndarray:
+    if row.shape[0] == size:
+        return row
+    return jnp.concatenate(
+        [row, jnp.zeros(size - row.shape[0], jnp.uint32)])
 
 
 def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
@@ -265,18 +334,19 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
                 if pool is not None:
                     # keep the PackedSource itself: the arena assembler
                     # materializes its group-padded layout rows on demand
-                    # (memoized host-side, one device matrix per operand)
-                    psrc = [(s, source.pad_block_ids(b, c_pad, k_pad))
-                            for s, b in cand]
+                    # (memoized host-side, one device matrix per operand);
+                    # block ids stay raw — the stacker pads them to the
+                    # launching key's buckets (fusion may raise them)
+                    psrc = [(s, b) for s, b in cand]
                 else:
                     # memoized at the payload's own pads; the stacker
                     # zero-extends into the group slot (no per-group re-pad)
                     psrc = [(source.cached_layout_np(s, s.self_pads(), stats),
-                             source.pad_block_ids(b, c_pad, k_pad))
-                            for s, b in cand]
+                             b) for s, b in cand]
+                # decoded_ints for packed folds is accounted at LAUNCH
+                # time (the program decodes c_pad blocks per row, and
+                # fusion may raise c_pad past this group's bucket)
                 source._bump(stats, "skip_folds", len(psrc))
-                source._bump(stats, "decoded_ints",
-                             len(psrc) * c_pad * rows * 128)
             N = max((s.vals.shape[0] for s in dec), default=128)
             if pool is not None:
                 r_op = seed.vals
@@ -299,23 +369,22 @@ def schedule(index: HybridIndex, queries: list[list[int]], cache=None,
 # device programs (one dispatch per GroupKey chunk)
 # --------------------------------------------------------------------------
 
-def _fold_pallas(r, folds, fold_active):
-    """Pallas-backend fold: every step gallops through the TPU kernel;
-    rows with an inactive slot pass through the step unchanged."""
-    from repro.kernels import ops as kernel_ops
-    return its.masked_svs_scan(r, folds, fold_active,
-                               kernel_ops.intersect_gallop_batch)
+def _mask_fold_scan(r, valid, folds, fold_active, intersect_fn):
+    """Scan the stacked folds, ANDing each step's match mask into ``valid``.
+    Every intersect runs against the *original* sorted seed buffer ``r``:
+    compacting between folds never shrank the (static) operand shapes, but
+    its cumsum+scatter was the single most expensive op in the program —
+    mask-folding removes it, which is what keeps fused family-ceiling
+    shapes affordable (DESIGN.md §2.10).  ``folds`` may be a plain
+    (J, B, N) stack or any pytree of (J, ...)-leading operands (the packed
+    layout tuple); inactive (j, b) slots leave their row's mask untouched."""
+    def step(v, xs):
+        f, act = xs
+        hit = intersect_fn(r, f)
+        return v & jnp.where(act[:, None], hit, True), None
 
-
-def _probe_scan(r, words):
-    """Probe candidates (B, M) against stacked bitmap terms (J_b, B, W)."""
-    def step(rr, w):
-        mask = jax.vmap(bm.probe)(w, rr, rr != its.SENTINEL)
-        rr, _ = its.compact_batch(rr, mask)
-        return rr, None
-
-    r, _ = lax.scan(step, r, words)
-    return r, its.count_valid(r)
+    valid, _ = lax.scan(step, valid, (folds, fold_active))
+    return valid
 
 
 @partial(jax.jit, static_argnames=("algo", "backend", "mode", "block_rows"),
@@ -323,29 +392,43 @@ def _probe_scan(r, words):
 def _svs_program(r, folds, fold_active, pk, pk_active, words, algo: str,
                  backend: str, mode: str, block_rows: int):
     """One device program per group chunk: decoded folds → packed folds →
-    bitmap probes, candidates staying on device throughout.  ``pk`` is the
+    bitmap probes, candidates staying on device throughout.  Every stage
+    computes a match mask over the original sorted seed buffer ``r`` and
+    ANDs it into one running validity mask; the result is ``r`` with
+    invalid slots set to SENTINEL — per-row sorted but NOT compacted (the
+    host extracts the valid prefix-by-mask at collect).  ``pk`` is the
     tuple of stacked batch-uniform packed operands (or None); ``words`` the
     stacked bitmap rows (or None).  ``r`` is donated off-CPU (see module
     docstring)."""
+    valid = r != its.SENTINEL
     if folds.shape[0]:
         if backend == "pallas":
-            r, _ = _fold_pallas(r, folds, fold_active)
+            from repro.kernels import ops as kernel_ops
+            fold_fn = kernel_ops.intersect_gallop_batch
+        elif algo == "tiled":
+            fold_fn = partial(its.intersect_tiled_batch,
+                              tile_r=min(128, r.shape[-1]),
+                              tile_f=min(1024, folds.shape[-1]))
         else:
-            r, _ = its.svs_fold_batch(r, folds, algo=algo,
-                                      fold_active=fold_active)
+            fold_fn = its.intersect_gallop_batch
+        valid = _mask_fold_scan(r, valid, folds, fold_active, fold_fn)
     if pk is not None:
         if backend == "pallas":
             from repro.kernels import ops as kernel_ops
             packed_fn = kernel_ops.intersect_packed_batch
         else:
             packed_fn = its.intersect_packed_batch
-        r, _ = its.masked_svs_scan(
-            r, pk, pk_active,
+        valid = _mask_fold_scan(
+            r, valid, pk, pk_active,
             lambda rr, op: packed_fn(rr, *op, mode=mode,
                                      block_rows=block_rows))
     if words is not None:
-        r, _ = _probe_scan(r, words)
-    return r, its.count_valid(r)
+        def wstep(v, w):
+            return jax.vmap(bm.probe)(w, r, v), None
+
+        valid, _ = lax.scan(wstep, valid, words)
+    return (jnp.where(valid, r, its.SENTINEL),
+            jnp.sum(valid.astype(jnp.int32), axis=-1))
 
 
 @jax.jit
@@ -362,10 +445,12 @@ def _stack_packed(key: GroupKey, items: list[_Item], Bp: int,
                   jp: int | None = None):
     """Stack the per-item packed layouts into uniform (Jp, Bp, ...) numpy
     operands.  Layouts arrive self-padded (the memoized projection); each
-    slot zero-extends into the group buckets — pad blocks have width 0 and
-    in-bounds offsets, and block ids beyond the real count never appear in
-    the candidate list, so the extension is never decoded.  Inactive (j, b)
-    slots keep all-pad block ids (→ all-SENTINEL decode) and are
+    slot zero-extends into the key's buckets (which fusion may have raised
+    past the scheduled group's) — pad blocks have width 0 and in-bounds
+    offsets, and block ids beyond the real count never appear in the
+    candidate list, so the extension is never decoded.  Raw candidate block
+    ids pad with the key's out-of-range id ``k_pad`` (→ all-SENTINEL
+    decode); inactive (j, b) slots keep all-pad block ids and are
     additionally masked by the active flags.  Returns (six host operand
     stacks, candidate block ids, active) — callers compose/upload."""
     k_pad, t_pad, c_pad, e_pad, rows, _ = key.packed
@@ -380,14 +465,14 @@ def _stack_packed(key: GroupKey, items: list[_Item], Bp: int,
     PEa = np.zeros((Jp, Bp, e_pad), np.uint32)
     active = np.zeros((Jp, Bp), bool)
     for b, it in enumerate(items):
-        for j, (lay, blk_p) in enumerate(it.psrc):
+        for j, (lay, blk) in enumerate(it.psrc):
             K, T, E = (lay.widths.shape[0], lay.words.shape[0],
                        lay.exc_pos.shape[0])
             PW[j, b, :T] = lay.words
             PWid[j, b, :K] = lay.widths
             POf[j, b, :K] = lay.offsets
             PMx[j, b, :K] = lay.maxes
-            PBk[j, b] = blk_p
+            PBk[j, b, : blk.shape[0]] = blk
             if e_pad and E:
                 PEp[j, b, :E] = lay.exc_pos
                 PEa[j, b, :E] = lay.exc_add
@@ -419,7 +504,7 @@ def _stack_packed_arena(key: GroupKey, items: list[_Item], Bp: int,
     PBk = np.full((Jp, Bp, c_pad), k_pad, np.int32)
     active = np.zeros((Jp, Bp), bool)
     for b, it in enumerate(items):
-        for j, (src, blk_p) in enumerate(it.psrc):
+        for j, (src, blk) in enumerate(it.psrc):
             slot = arenas[0].slots.get(src.key)
             if slot is None:
                 lay = source.cached_layout_np(src, pads)
@@ -428,7 +513,7 @@ def _stack_packed_arena(key: GroupKey, items: list[_Item], Bp: int,
                 for a, row in zip(arenas, ops):
                     slot = a.slot(src.key, lambda r=row: np.asarray(r))
             idx[j, b] = slot
-            PBk[j, b] = blk_p
+            PBk[j, b, : blk.shape[0]] = blk
             active[j, b] = True
     gidx = jnp.asarray(idx.reshape(-1))
     stacked = [_GATHER(a.buffer(), gidx).reshape(
@@ -468,12 +553,23 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
                   jb: int | None = None, jp: int | None = None):
     """Build the operands of one svs group chunk.  Host mode stacks numpy
     and pays one H2D per operand; pool mode gathers resident rows (committed
-    to the pool's device).  ``bp``/``j``/``jb``/``jp`` override the
-    chunk-derived paddings so the sharded executor can assemble uniform
-    per-shard slices (``repro.index.shard``); None derives them from the
-    items — the single-device path, unchanged."""
+    to the pool's device).  Rows narrower than the key's buckets (fused
+    megagroup keys raise them past the scheduled shapes) extend with
+    sentinel / zero-word filler — inert by the module's padding invariant.
+    ``bp``/``j``/``jb``/``jp`` override the chunk-derived paddings so the
+    sharded executor can assemble uniform per-shard slices
+    (``repro.index.shard``); fused keys pin the arity ceilings via
+    ``key.fused``; None derives them from the items — the single-device
+    unfused path, unchanged."""
     B = len(items)
+    kj, kjb, kjp = key.fused if key.fused else (None, None, None)
     Bp = _bucket_rows(B) if bp is None else bp
+    if j is None:
+        j = kj
+    if jb is None:
+        jb = kjb
+    if jp is None:
+        jp = kjp
     J = (max((len(it.folds) for it in items), default=0)
          if j is None else j)
     Jb = (max((_n_bitmaps(it) for it in items), default=0)
@@ -508,12 +604,13 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
             widx = np.zeros((Jb, Bp), np.int32)     # 0 = probe identity
             for b, it in enumerate(items):
                 for jj, (bk, wnp) in enumerate(it.bm_keys or ()):
-                    widx[jj, b] = wa.slot(bk, lambda w=wnp: w)
+                    widx[jj, b] = wa.slot(
+                        bk, lambda w=wnp: _extend_words(w, key.words))
             W = _GATHER(wa.buffer(),
                         jnp.asarray(widx.reshape(-1))
                         ).reshape(Jb, Bp, key.words)
     elif pool is not None:
-        R = _stack_rows([it.r for it in items]
+        R = _stack_rows([pool.padded(it.rsrc, key.m_bucket) for it in items]
                         + [pool.sentinel_row(key.m_bucket)] * (Bp - B))
         rows = []
         for j in range(J):
@@ -533,7 +630,8 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
                 for b in range(Bp):
                     it = items[b] if b < B else None
                     if it is not None and it.bm_dev and j < len(it.bm_dev):
-                        wrows.append(it.bm_dev[j])
+                        wrows.append(_extend_words_dev(it.bm_dev[j],
+                                                       key.words))
                     else:
                         # inactive slots are all-ones — the probe identity
                         wrows.append(pool.ones_row(key.words))
@@ -541,22 +639,24 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
     else:
         Rnp = np.full((Bp, key.m_bucket), its.SENTINEL, dtype=np.int32)
         for b, it in enumerate(items):
-            Rnp[b] = it.r
+            Rnp[b, : it.r.shape[0]] = it.r
         R = jnp.asarray(Rnp)                                    # (Bp, M)
         F = np.full((J, Bp, key.n_bucket), its.SENTINEL, dtype=np.int32)
         for b, it in enumerate(items):
             for j, fold in enumerate(it.folds):
-                F[j, b] = fold
+                F[j, b, : fold.shape[0]] = fold
                 active[j, b] = True
         F = jnp.asarray(F)                                      # (J, Bp, N)
         W = None
         if Jb:
-            # inactive slots are all-ones rows — the probe identity
+            # inactive slots are all-ones rows — the probe identity; the
+            # zero extension past a real row's own W is never probed
             Wnp = np.full((Jb, Bp, key.words), 0xFFFFFFFF, dtype=np.uint32)
             for b, it in enumerate(items):
                 if it.bm_words is not None:
                     for j in range(it.bm_words.shape[0]):
-                        Wnp[j, b] = it.bm_words[j]
+                        Wnp[j, b, : it.bm_words.shape[1]] = it.bm_words[j]
+                        Wnp[j, b, it.bm_words.shape[1]:] = 0
             W = jnp.asarray(Wnp)
     pkparts = None
     if key.packed is not None:
@@ -568,11 +668,14 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
 
 
 def _launch_svs_group(key: GroupKey, items: list[_Item], backend: str,
-                      pool, stats: dict | None):
+                      pool, stats: dict | None, timings=None):
     """Dispatch one svs device program; returns un-materialized device
     results (vals, counts).  The batch dimension is bucketed (sentinel-
-    padded rows, results sliced back at collect time) so the compile count
-    stays bounded by the signature space."""
+    padded rows, results masked back at collect time) so the compile count
+    stays bounded by the signature space.  ``timings`` (a
+    ``pipeline.StageTimings``) splits operand assembly from the async
+    program enqueue."""
+    t0 = time.perf_counter()
     R, F, active, pkparts, W, Bp, J, Jb = _assemble_svs(key, items, pool)
     pk = pk_active = None
     if pkparts is not None:
@@ -582,19 +685,37 @@ def _launch_svs_group(key: GroupKey, items: list[_Item], backend: str,
     mode, rows = "d1", 32
     if key.packed is not None:
         rows, mode = key.packed[4], key.packed[5]
+        # actual partial-decode volume: every active packed slot decodes
+        # c_pad blocks at the LAUNCHING key's bucket (fused keys raise it
+        # past the scheduled group's, and the stat must track the work the
+        # program really does)
+        source._bump(stats, "decoded_ints",
+                     sum(len(it.psrc) for it in items)
+                     * key.packed[2] * rows * 128)
     if stats is not None:
         stats.setdefault("signatures", set()).add(("svs", key, Bp, J, Jb))
-    return _svs_program(R, F, jnp.asarray(active), pk, pk_active, W,
-                        key.algo, backend, mode, rows)
+    t1 = time.perf_counter()
+    out = _svs_program(R, F, jnp.asarray(active), pk, pk_active, W,
+                       key.algo, backend, mode, rows)
+    if timings is not None:
+        t2 = time.perf_counter()
+        timings.assemble += t1 - t0
+        timings.dispatch += t2 - t1
+    return out
 
 
 def _assemble_bitmap(key: GroupKey, items: list[_Item], pool, *,
                      bp: int | None = None, j: int | None = None):
     """Stacked (Bp, J, W) word rows of one all-bitmap group chunk (device
     array in pool mode, host numpy otherwise).  ``bp``/``j`` override the
-    chunk-derived paddings for sharded per-shard slices."""
+    chunk-derived paddings for sharded per-shard slices; fused keys pin
+    ``j`` via ``key.fused``.  Rows narrower than a fused W bucket
+    zero-extend — every real row ANDs at least one zero extension, so the
+    extension's popcount is 0."""
     B = len(items)
     Bp = _bucket_rows(B) if bp is None else bp
+    if j is None and key.fused:
+        j = key.fused[0]
     J = (max((_n_bitmaps(it) for it in items), default=1)
          if j is None else j)
     if pool is not None and all(it.bm_keys is not None for it in items):
@@ -605,7 +726,8 @@ def _assemble_bitmap(key: GroupKey, items: list[_Item], pool, *,
         widx[B:, :] = source.ResidentPool.BM_ZERO_SLOT
         for b, it in enumerate(items):
             for jj, (bk, wnp) in enumerate(it.bm_keys):
-                widx[b, jj] = wa.slot(bk, lambda w=wnp: w)
+                widx[b, jj] = wa.slot(
+                    bk, lambda w=wnp: _extend_words(w, key.words))
         words = _GATHER(wa.buffer(),
                         jnp.asarray(widx.reshape(-1))
                         ).reshape(Bp, J, key.words)
@@ -615,7 +737,7 @@ def _assemble_bitmap(key: GroupKey, items: list[_Item], pool, *,
             it = items[b] if b < B else None
             for j in range(J):
                 if it is not None and j < len(it.bm_dev):
-                    rows.append(it.bm_dev[j])
+                    rows.append(_extend_words_dev(it.bm_dev[j], key.words))
                 elif it is not None:
                     rows.append(pool.ones_row(key.words))   # AND identity
                 else:
@@ -623,45 +745,190 @@ def _assemble_bitmap(key: GroupKey, items: list[_Item], pool, *,
         words = _stack_rows(rows).reshape(Bp, J, key.words)
     else:
         # real rows pad missing terms with all-ones (AND identity); padded
-        # batch rows stay all-zero so their popcount is 0
+        # batch rows — and every real row's words past its own W — stay
+        # all-zero so their popcount contribution is 0
         wnp = np.zeros((Bp, J, key.words), dtype=np.uint32)
         for b, it in enumerate(items):
-            wnp[b] = 0xFFFFFFFF
-            wnp[b, : it.bm_words.shape[0]] = it.bm_words
+            wr = it.bm_words.shape[1]
+            wnp[b, :, :wr] = 0xFFFFFFFF
+            wnp[b, : it.bm_words.shape[0], :wr] = it.bm_words
         words = jnp.asarray(wnp)
     return words, Bp, J
 
 
 def _launch_bitmap_group(key: GroupKey, items: list[_Item], pool,
-                         stats: dict | None):
+                         stats: dict | None, timings=None):
+    t0 = time.perf_counter()
     words, Bp, J = _assemble_bitmap(key, items, pool)
     if stats is not None:
         stats.setdefault("signatures", set()).add(("bm", key, Bp, J))
-    return _bitmap_and_program(words)
+    t1 = time.perf_counter()
+    out = _bitmap_and_program(words)
+    if timings is not None:
+        t2 = time.perf_counter()
+        timings.assemble += t1 - t0
+        timings.dispatch += t2 - t1
+    return out
 
 
 def _chunk_size(key: GroupKey, items: list[_Item],
                 max_group_size: int) -> int:
     """Items per device program: flat cap ∧ operand-int budget (so huge
-    J·N fold stacks shrink the batch instead of exploding device memory)."""
+    J·N fold stacks shrink the batch instead of exploding device memory).
+    Fused keys budget at their pinned arity ceilings."""
     if key.kind == "bitmap":
-        J = max((it.bm_words.shape[0] if it.bm_words is not None
-                 else len(it.bm_dev)) for it in items)
+        J = (key.fused[0] if key.fused else
+             max((it.bm_words.shape[0] if it.bm_words is not None
+                  else len(it.bm_dev)) for it in items))
         per_item = J * key.words
     else:
-        J = max(len(it.folds) for it in items)
-        Jb = max((it.bm_words.shape[0] if it.bm_words is not None
-                  else len(it.bm_dev) if it.bm_dev is not None else 0)
-                 for it in items)
+        if key.fused:
+            J, Jb, Jp = key.fused
+        else:
+            J = max(len(it.folds) for it in items)
+            Jb = max((it.bm_words.shape[0] if it.bm_words is not None
+                      else len(it.bm_dev) if it.bm_dev is not None else 0)
+                     for it in items)
         per_item = J * key.n_bucket + key.m_bucket + Jb * key.words
         if key.packed is not None:
             k_pad, t_pad, c_pad, e_pad, rows, _ = key.packed
-            Jp = max(len(it.psrc) for it in items)
+            if not key.fused:
+                Jp = max(len(it.psrc) for it in items)
             # compressed words + per-block metadata + the partial decode
             # buffer the program materializes (c_pad blocks of rows×128)
             per_item += Jp * (t_pad * 128 + 3 * k_pad + c_pad
                               + 2 * e_pad + c_pad * rows * 128)
     return max(1, min(max_group_size, GROUP_INT_BUDGET // max(per_item, 1)))
+
+
+# --------------------------------------------------------------------------
+# megagroup fusion: collapse per-batch dispatch count (DESIGN.md §2.10)
+# --------------------------------------------------------------------------
+
+def _pow2_ceil(x: int) -> int:
+    """Next power of two ≥ x (0 stays 0).  Fused arity ceilings are
+    bucketed so the fused signature does not drift with each batch's exact
+    arity mix."""
+    return its.pow2_bucket(x, floor=1) if x > 0 else 0
+
+
+class FusionPlan:
+    """Sticky fused-dimension ceilings, one entry per signature family.
+
+    Fused operand shapes are maxima over a batch's member groups; left
+    alone they would drift batch to batch (a batch that happens to lack
+    the longest list would compile a second, slightly smaller program).
+    The plan makes ceilings *monotone*: every batch raises its family's
+    sticky dims to at least everything previously seen, so fused
+    signatures converge to a fixed point within the first few batches —
+    which is what lets ``warmup`` reach that fixed point before serving
+    starts.  Create one plan per serving session and pass it to every
+    execute call (a fresh plan per call still fuses, it just re-derives
+    ceilings per batch)."""
+
+    def __init__(self):
+        self.dims: dict[tuple, list[int]] = {}
+
+    def raised(self, famid: tuple, dims: tuple) -> tuple:
+        cur = self.dims.get(famid)
+        if cur is None:
+            self.dims[famid] = cur = list(dims)
+        else:
+            for i, d in enumerate(dims):
+                if d > cur[i]:
+                    cur[i] = d
+        return tuple(cur)
+
+
+def fuse_groups(groups: dict[GroupKey, list[_Item]],
+                plan: FusionPlan | None = None,
+                stats: dict | None = None) -> dict[GroupKey, list[_Item]]:
+    """Coarsen scheduled GroupKeys into signature *families* and merge each
+    family's items along the batch-row axis, so a mixed batch launches
+    O(#families) fused device programs instead of one per signature.
+
+    A family is (kind, packed block geometry).  Every shape dimension that
+    is NOT part of the family identity — the M/N/W buckets, the packed
+    k/t/c/e pads, and the pow2-bucketed fold/probe arities — is raised to
+    the family ceiling (max over member groups, further raised by the
+    sticky ``plan``).  This is sound because group programs are
+    row-independent and padding is inert (module invariants): a row
+    assembled into a wider slot meets sentinel filler, masked no-op folds,
+    all-pad packed layouts, and identity bitmap rows, none of which change
+    its result.  ``tests/test_fusion.py`` pins fused == unfused ==
+    sequential byte for byte across backends, corpora, and shard counts.
+
+    Fused svs programs force ``algo='gallop'``: the tiled ratio rule was
+    derived per scheduled group, family ceilings inflate M against it, and
+    the vmapped tile walk loses its data-dependent early exit entirely at
+    ceiling shapes, while galloping stays O(M log N) per row regardless of
+    padding.  Groups without packed folds keep their own (svs, None)
+    family rather than joining a packed one — inactive packed slots would
+    still pay the partial decode for every row.
+
+    The candidate-block bucket ``c_pad`` is the one ceiling that costs
+    real decode work (each row partially decodes c_pad blocks whether it
+    needs them or not), so it is batch-derived and only the plan's
+    stickiness widens it: fused decode volume is bounded by the observed
+    workload, never by the index size.
+    """
+    fams: dict[tuple, list] = {}
+    for key, items in groups.items():
+        geom = None if key.packed is None else (key.packed[4], key.packed[5])
+        fams.setdefault((key.kind, geom), []).append((key, items))
+    fused: dict[GroupKey, list[_Item]] = {}
+    for (kind, geom), members in fams.items():
+        items = [it for _, mi in members for it in mi]
+        if kind == "bitmap":
+            dims = (max(k.words for k, _ in members),
+                    _pow2_ceil(max(_n_bitmaps(it) for it in items)))
+            if plan is not None:
+                dims = plan.raised((kind, geom), dims)
+            w, jb = dims
+            fkey = GroupKey("bitmap", 0, 0, w, "-", fused=(jb,))
+        else:
+            dims = [max(k.m_bucket for k, _ in members),
+                    max(k.n_bucket for k, _ in members),
+                    max(k.words for k, _ in members),
+                    _pow2_ceil(max(len(it.folds) for it in items)),
+                    _pow2_ceil(max(_n_bitmaps(it) for it in items))]
+            if geom is not None:
+                dims += [max(k.packed[i] for k, _ in members)
+                         for i in range(4)]
+                dims.append(_pow2_ceil(max(len(it.psrc) for it in items)))
+            if plan is not None:
+                dims = list(plan.raised((kind, geom), tuple(dims)))
+            m, n, w, j, jb = dims[:5]
+            packed = (tuple(dims[5:9]) + geom) if geom is not None else None
+            jp = dims[9] if geom is not None else 0
+            fkey = GroupKey("svs", m, n, w, "gallop", packed,
+                            fused=(j, jb, jp))
+        fused[fkey] = items
+    if stats is not None:
+        stats["n_sched_groups"] = (stats.get("n_sched_groups", 0)
+                                   + len(groups))
+        stats["n_fused_groups"] = (stats.get("n_fused_groups", 0)
+                                   + len(fused))
+    return fused
+
+
+def _compile_count() -> int:
+    """Total jit-cache entries behind the group programs, the arena
+    gather, and every row stacker (the arena-fallback path compiles stack
+    programs mid-serving, e.g. when a cache fill drops a row's host copy)
+    — the compiles ``warmup`` is meant to front-load.  Uses jax's
+    (private, guarded) ``_cache_size``; returns 0 when the running jax
+    does not expose it, which only disables the ``n_compiles``
+    *reporting*, never correctness."""
+    n = 0
+    for fn in (_svs_program, _bitmap_and_program, _GATHER, *_STACKERS):
+        size = getattr(fn, "_cache_size", None)
+        if size is not None:
+            try:
+                n += size()
+            except Exception:
+                pass
+    return n
 
 
 # --------------------------------------------------------------------------
@@ -683,41 +950,54 @@ def launch_groups(groups: dict[GroupKey, list[_Item]], *, n_queries: int,
                   backend: str = "jax", max_results: int = 1 << 16,
                   max_group_size: int = MAX_GROUP_SIZE,
                   pool: "source.ResidentPool | None" = None,
-                  stats: dict | None = None) -> PendingBatch:
-    """Dispatch one device program per group chunk without materializing
-    any result — the host returns as soon as everything is enqueued."""
+                  stats: dict | None = None, timings=None) -> PendingBatch:
+    """Dispatch one device program per (possibly fused) group chunk without
+    materializing any result — the host returns as soon as everything is
+    enqueued.  ``timings`` (a ``pipeline.StageTimings``) attributes operand
+    assembly vs program enqueue wall time."""
     launched = []
-    n_programs = 0
+    n_dispatches = 0
+    c0 = _compile_count() if stats is not None else 0
     for key, items in groups.items():
         step = _chunk_size(key, items, max_group_size)
         for lo in range(0, len(items), step):
             chunk = items[lo: lo + step]
             if key.kind == "bitmap":
-                vals, counts = _launch_bitmap_group(key, chunk, pool, stats)
+                vals, counts = _launch_bitmap_group(key, chunk, pool, stats,
+                                                    timings)
             else:
                 vals, counts = _launch_svs_group(key, chunk, backend, pool,
-                                                 stats)
+                                                 stats, timings)
             launched.append((key, chunk, vals, counts))
-            n_programs += 1
-    accumulate_launch_stats(stats, groups, n_programs)
+            n_dispatches += 1
+    accumulate_launch_stats(stats, groups, n_dispatches)
+    if stats is not None:
+        stats["n_compiles"] = (stats.get("n_compiles", 0)
+                               + _compile_count() - c0)
     return PendingBatch(n_queries=n_queries, max_results=max_results,
                         launched=launched, stats=stats)
 
 
-def accumulate_launch_stats(stats: dict | None, groups, n_programs: int):
+def accumulate_launch_stats(stats: dict | None, groups, n_dispatches: int):
     """Accumulate per-launch counters (like the decoded_ints/skip_folds
     counters) so one stats dict can span a chunked run of many batches —
-    shared by the single-device and sharded launchers."""
+    shared by the single-device and sharded launchers.  ``n_programs``
+    stays an alias of ``n_dispatches`` (the historical name; both count
+    device program launches — distinct *compiled* programs are
+    ``len(stats['signatures'])``)."""
     if stats is None:
         return
-    for k, v in (("n_groups", len(groups)), ("n_programs", n_programs),
+    for k, v in (("n_groups", len(groups)), ("n_dispatches", n_dispatches),
+                 ("n_programs", n_dispatches),
                  ("n_items", sum(len(v) for v in groups.values()))):
         stats[k] = stats.get(k, 0) + v
 
 
 def collect_batch(pending: PendingBatch) -> list[QueryResult]:
     """Materialize a launched batch (blocks on the device) and re-assemble
-    per-query results in part order — byte-identical to ``engine.query``."""
+    per-query results in part order — byte-identical to ``engine.query``.
+    svs rows arrive masked-but-uncompacted (valid entries are the
+    non-sentinel slots, still sorted); extraction happens here on host."""
     per_query: list[list[tuple[int, np.ndarray]]] = \
         [[] for _ in range(pending.n_queries)]
     counts = [0] * pending.n_queries
@@ -734,7 +1014,8 @@ def collect_batch(pending: PendingBatch) -> list[QueryResult]:
             if key.kind == "bitmap":
                 docs = bm.extract_np(vals[b])
             else:
-                docs = vals[b, : cnt]
+                row = vals[b]
+                docs = row[row != its.SENTINEL]
             per_query[it.qi].append((it.pi, docs.astype(np.int64)
                                      + it.doc_lo))
     out = []
@@ -750,7 +1031,8 @@ def execute_batch(index: HybridIndex, queries: list[list[int]], *,
                   backend: str = "jax", max_results: int = 1 << 16,
                   max_group_size: int = MAX_GROUP_SIZE, cache=None,
                   skip: bool = True, stats: dict | None = None,
-                  pool: "source.ResidentPool | None" = None
+                  pool: "source.ResidentPool | None" = None,
+                  fuse: bool = True, plan: FusionPlan | None = None
                   ) -> list[QueryResult]:
     """Answer a batch of conjunctive queries; results are element-for-element
     identical to ``engine.query`` run per query.
@@ -761,15 +1043,120 @@ def execute_batch(index: HybridIndex, queries: list[list[int]], *,
     pool: optional ResidentPool — operands are served from (and staged
     into) the device-resident index; group assembly becomes index-gathering
     over resident buffers instead of per-batch decode + padding + H2D.
+    fuse: coarsen the scheduled groups into megagroup families so the
+    batch launches O(#families) device programs (DESIGN.md §2.10); False
+    keeps one program per scheduled signature (the pre-fusion behavior,
+    kept for A/B benchmarking — results are byte-identical either way).
+    plan: optional FusionPlan carrying sticky family ceilings across calls
+    (pass one per serving session so fused signatures converge; None
+    re-derives ceilings per batch).
     stats: optional dict, filled with scheduler counters (n_groups,
-    n_programs, n_items, decoded_ints, skip_folds, resident_hits,
-    layout_hits/misses) for introspection.
+    n_sched_groups/n_fused_groups, n_dispatches, n_compiles, n_items,
+    decoded_ints, skip_folds, resident_hits, layout_hits/misses) for
+    introspection.
     """
     assert backend in ("jax", "pallas"), backend
     groups = schedule(index, queries, cache=cache, skip=skip, stats=stats,
                       pool=pool)
+    if fuse:
+        groups = fuse_groups(groups, plan=plan, stats=stats)
     pending = launch_groups(groups, n_queries=len(queries), backend=backend,
                             max_results=max_results,
                             max_group_size=max_group_size, pool=pool,
                             stats=stats)
     return collect_batch(pending)
+
+
+# --------------------------------------------------------------------------
+# AOT signature warmup (DESIGN.md §2.10)
+# --------------------------------------------------------------------------
+
+def synth_warmup_queries(index: HybridIndex, n: int, seed: int = 0,
+                         arities=(2, 3, 4, 5)) -> list[list[int]]:
+    """Synthesize a warmup query sample from the index's own term stats —
+    the fallback when no representative slice of the real stream is at
+    hand.  Seeds draw from the shortest tercile of list terms (the seed of
+    a real conjunctive query is its *shortest* list, so sampling seeds
+    uniformly would sticky the plan's M ceiling to the longest list and
+    permanently oversize every fused program); the remaining positions
+    draw uniformly so fold/bitmap/packed families all get exercised."""
+    rng = np.random.default_rng(seed)
+    lens: dict[int, int] = {}
+    for part in index.parts:            # aggregate over ALL parts: a term
+        for tid, tp in part.terms.items():   # may be empty in part 0 only
+            if tp.kind != "empty":
+                lens[tid] = lens.get(tid, 0) + tp.n
+    terms = sorted(lens.items(), key=lambda t: t[1])
+    if not terms:
+        return []
+    ids = [t for t, _ in terms]
+    short = ids[: max(len(ids) // 3, 1)]
+    queries = []
+    for i in range(n):
+        a = arities[i % len(arities)]
+        q = {int(rng.choice(short))}
+        while len(q) < min(a, len(ids)):
+            q.add(int(rng.choice(ids)))
+        queries.append(sorted(q))
+    return queries
+
+
+def warm_to_fixed_point(run_fn, max_passes: int = 4) -> tuple[int, int]:
+    """Repeat ``run_fn(stats)`` until a pass adds no new program signature
+    (cache fills, pool staging, and sticky plan ceilings all change how
+    batches compile between passes).  Returns (n_signatures, passes) —
+    the one convergence rule shared by ``warmup`` and serve.py's warm
+    loops."""
+    stats: dict = {}
+    seen = -1
+    passes = 0
+    for _ in range(max_passes):
+        run_fn(stats)
+        passes += 1
+        n_sigs = len(stats.get("signatures", ()))
+        if n_sigs == seen:
+            break
+        seen = n_sigs
+    return len(stats.get("signatures", ())), passes
+
+
+def warmup(index: HybridIndex, queries: list[list[int]] | None = None, *,
+           plan: FusionPlan, batch_size: int = 32, backend: str = "jax",
+           pool: "source.ResidentPool | None" = None, cache=None,
+           skip: bool = True, max_group_size: int = MAX_GROUP_SIZE,
+           max_passes: int = 4, seed: int = 0) -> dict:
+    """AOT signature warmup: precompile the fused family ladder before the
+    first real batch, so steady-state serving never compiles.
+
+    Runs the fused pipeline over ``queries`` — a representative sample of
+    the expected workload; pass a slice of the real stream when one is at
+    hand, else ``synth_warmup_queries`` fabricates one from the index term
+    stats — repeating until no new program signature appears.  Repetition
+    matters twice over: pool staging and cache fills change how terms
+    resolve between passes (decoded vs packed), and the sticky ``plan``
+    ceilings only reach their fixed point once a pass stops raising them.
+    Every compile this triggers is one the first serving batches would
+    otherwise have stalled on (a realistic mixed batch used to pay the
+    whole signature ladder; fused it pays O(#families) compiles, all of
+    them front-loaded here).
+
+    Returns ``{"n_compiles", "n_signatures", "passes", "time_s"}`` — the
+    compile count is measured from jax's jit caches, and a steady-state
+    serve loop after warmup should report ``n_compiles == 0``."""
+    t0 = time.perf_counter()
+    c0 = _compile_count()
+    if queries is None:
+        queries = synth_warmup_queries(index, 2 * batch_size, seed=seed)
+
+    def one_pass(stats):
+        for lo in range(0, len(queries), batch_size):
+            execute_batch(index, queries[lo: lo + batch_size],
+                          backend=backend, cache=cache, skip=skip,
+                          pool=pool, fuse=True, plan=plan,
+                          max_group_size=max_group_size, stats=stats)
+
+    n_signatures, passes = warm_to_fixed_point(one_pass, max_passes)
+    return {"n_compiles": _compile_count() - c0,
+            "n_signatures": n_signatures,
+            "passes": passes,
+            "time_s": time.perf_counter() - t0}

@@ -108,6 +108,25 @@ def build(postings: list[np.ndarray], n_docs: int, codec_name: str = "bp-d1",
     return HybridIndex(n_docs=n_docs, B=B, codec_name=codec_name, parts=parts)
 
 
+def warmup_serving(index: HybridIndex, queries: list[list[int]] | None = None,
+                   *, plan=None, batch_size: int = 32, backend: str = "jax",
+                   pool=None, **kwargs) -> dict:
+    """Build-time AOT signature warmup (DESIGN.md §2.10): precompile the
+    fused family ladder so the first served batch never stalls on jit
+    compiles.  ``queries`` should be a representative workload sample when
+    one exists (e.g. a replayed log slice); None synthesizes one from the
+    index term stats.  Returns the ``batch.warmup`` report and the plan it
+    warmed (pass both to the serving loop)."""
+    from repro.index import batch as batch_lib
+    if plan is None:
+        plan = batch_lib.FusionPlan()
+    report = batch_lib.warmup(index, queries, plan=plan,
+                              batch_size=batch_size, backend=backend,
+                              pool=pool, **kwargs)
+    report["plan"] = plan
+    return report
+
+
 def build_sharded(postings: list[np.ndarray], n_docs: int, *, n_shards: int,
                   codec_name: str = "bp-d1", B: int = 0,
                   n_parts: int | None = None, keep_raw: bool = False,

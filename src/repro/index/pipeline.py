@@ -26,11 +26,17 @@ to ``execute_batch`` run batch by batch — the differential guarantee
 Per-stage wall time is accounted into ``StageTimings``:
 
     stage     host scheduling: resolve/bucketing + candidate-block search
-    dispatch  operand assembly + async program enqueue
+              (+ megagroup fusion, which is pure bookkeeping)
+    assemble  operand assembly (arena gathers / host stacking + upload)
+    dispatch  async program enqueue
     block     time spent blocked on device results at collect
 
-``serve.py --pipeline N`` reports the breakdown; ``block`` collapsing
-toward zero at depth ≥ 2 is the visible signature of a hidden device.
+``serve.py --pipeline N`` and ``bench_engine.py --profile`` report the
+breakdown; ``block`` collapsing toward zero at depth ≥ 2 is the visible
+signature of a hidden device.  The assemble/dispatch split is attributed
+inside the launcher (``batch.launch_groups`` /
+``shard.launch_groups_sharded`` accept the timings object); a custom
+``launch_fn`` that ignores it simply leaves those two fields zero.
 
 This module is DESIGN.md §2.8 (the pipelined half); the sharded executor
 (DESIGN.md §2.9, ``repro.index.shard``) reuses this exact loop through the
@@ -39,9 +45,10 @@ devices while in-flight tracking, depth bounding, and stage accounting
 stay shared.  Invariants callers rely on:
 
   * **Byte-identical to the unpipelined path** — mutations of shared
-    state (pool staging, cache fills, layout memo, arena growth) happen
-    in schedule order, so results equal ``execute_batch`` run chunk by
-    chunk, and therefore ``engine.query`` per query, at every depth.
+    state (pool staging, cache fills, layout memo, arena growth,
+    fusion-plan ceilings) happen in schedule order, so results equal
+    ``execute_batch`` run chunk by chunk, and therefore ``engine.query``
+    per query, at every depth.
   * **Depth bounds memory** — at most ``depth`` un-collected batches pin
     operand/result buffers; depth 1 is strictly serial.
   * **Collect order is submission order** — results return in query
@@ -62,14 +69,16 @@ from repro.index.engine import QueryResult
 @dataclasses.dataclass
 class StageTimings:
     """Cumulative per-stage wall time across a pipelined run."""
-    stage: float = 0.0          # host scheduling (resolve + bucketing)
-    dispatch: float = 0.0       # operand assembly + async enqueue
+    stage: float = 0.0          # host scheduling (resolve + bucket + fuse)
+    assemble: float = 0.0       # operand assembly (gathers / stack + H2D)
+    dispatch: float = 0.0       # async program enqueue
     block: float = 0.0          # blocked on device results
     batches: int = 0
 
     def as_dict(self) -> dict:
-        return {"stage_s": self.stage, "dispatch_s": self.dispatch,
-                "block_s": self.block, "batches": self.batches}
+        return {"stage_s": self.stage, "assemble_s": self.assemble,
+                "dispatch_s": self.dispatch, "block_s": self.block,
+                "batches": self.batches}
 
 
 def execute_pipelined(index: HybridIndex, queries: list[list[int]], *,
@@ -77,6 +86,8 @@ def execute_pipelined(index: HybridIndex, queries: list[list[int]], *,
                       backend: str = "jax", max_results: int = 1 << 16,
                       max_group_size: int = batch_lib.MAX_GROUP_SIZE,
                       cache=None, skip: bool = True, pool=None,
+                      fuse: bool = True,
+                      plan: "batch_lib.FusionPlan | None" = None,
                       stats: dict | None = None,
                       timings: StageTimings | None = None,
                       schedule_fn=None, launch_fn=None
@@ -84,6 +95,11 @@ def execute_pipelined(index: HybridIndex, queries: list[list[int]], *,
     """Answer ``queries`` in ``batch_size`` chunks with up to ``depth``
     batches in flight; results are byte-identical to ``execute_batch`` run
     chunk by chunk (and therefore to ``engine.query`` per query).
+
+    ``fuse``/``plan`` mirror ``execute_batch``: each chunk's scheduled
+    groups coarsen into megagroup families before launch (DESIGN.md
+    §2.10).  A single sticky plan is created for the whole run when none
+    is passed, so fused signatures converge across chunks.
 
     ``schedule_fn(chunk, stats) -> groups`` and ``launch_fn(groups,
     n_queries, stats) -> PendingBatch`` override the two pipeline stages —
@@ -93,16 +109,22 @@ def execute_pipelined(index: HybridIndex, queries: list[list[int]], *,
     the single-device ``batch`` scheduler/launcher."""
     assert depth >= 1, depth
     assert batch_size >= 1, batch_size
+    if fuse and plan is None:
+        plan = batch_lib.FusionPlan()
     if schedule_fn is None:
         def schedule_fn(chunk, stats):
-            return batch_lib.schedule(index, chunk, cache=cache, skip=skip,
-                                      stats=stats, pool=pool)
+            groups = batch_lib.schedule(index, chunk, cache=cache,
+                                        skip=skip, stats=stats, pool=pool)
+            if fuse:
+                groups = batch_lib.fuse_groups(groups, plan=plan,
+                                               stats=stats)
+            return groups
     if launch_fn is None:
         def launch_fn(groups, n_queries, stats):
             return batch_lib.launch_groups(
                 groups, n_queries=n_queries, backend=backend,
                 max_results=max_results, max_group_size=max_group_size,
-                pool=pool, stats=stats)
+                pool=pool, stats=stats, timings=timings)
     inflight: deque[batch_lib.PendingBatch] = deque()
     out: list[QueryResult] = []
 
@@ -118,10 +140,8 @@ def execute_pipelined(index: HybridIndex, queries: list[list[int]], *,
         groups = schedule_fn(chunk, stats)
         t1 = time.perf_counter()
         pending = launch_fn(groups, len(chunk), stats)
-        t2 = time.perf_counter()
         if timings is not None:
             timings.stage += t1 - t0
-            timings.dispatch += t2 - t1
             timings.batches += 1
         inflight.append(pending)
         while len(inflight) >= depth:

@@ -40,6 +40,7 @@ Execution model — shard along the batch axis, not the program:
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 import jax
@@ -207,14 +208,19 @@ def _launch_svs_sharded(sharded: ShardedIndex, key, per_shard: list,
     """One device program covering all shards' items of one group chunk:
     rows are laid out shard-contiguously ((shard, slot) flattened), operands
     assembled per shard on the owning device and glued along the row axis.
-    Returns (flat item list with None pads, vals, counts)."""
+    Fused megagroup keys pin the arity ceilings (batch.fuse_groups), so
+    every shard's slice assembles at the same fused shapes.  Returns
+    (flat item list with None pads, vals, counts)."""
     S = sharded.n_shards
     all_items = [it for sub in per_shard for it in sub]
     Bq = batch_lib._bucket_rows(max(len(sub) for sub in per_shard))
-    J = max((len(it.folds) for it in all_items), default=0)
-    Jb = max((batch_lib._n_bitmaps(it) for it in all_items), default=0)
-    Jp = (max((len(it.psrc) for it in all_items), default=0)
-          if key.packed is not None else 0)
+    if key.fused:
+        J, Jb, Jp = key.fused
+    else:
+        J = max((len(it.folds) for it in all_items), default=0)
+        Jb = max((batch_lib._n_bitmaps(it) for it in all_items), default=0)
+        Jp = (max((len(it.psrc) for it in all_items), default=0)
+              if key.packed is not None else 0)
     Rs, Fs, As, Pk, Ws = [], [], [], [], []
     for sid in range(S):
         R, F, act, pkparts, W, _, _, _ = batch_lib._assemble_svs(
@@ -232,6 +238,11 @@ def _launch_svs_sharded(sharded: ShardedIndex, key, per_shard: list,
     mode, rows = "d1", 32
     if key.packed is not None:
         rows, mode = key.packed[4], key.packed[5]
+        # actual partial-decode volume at the launching key's c_pad (see
+        # batch._launch_svs_group — fusion may have raised the bucket)
+        source._bump(stats, "decoded_ints",
+                     sum(len(it.psrc) for it in all_items)
+                     * key.packed[2] * rows * 128)
         stacked = [_glue(sharded, [p[0][o] for p in Pk], axis=1)
                    for o in range(6)]
         PBk = _put_host(sharded,
@@ -253,7 +264,8 @@ def _launch_bitmap_sharded(sharded: ShardedIndex, key, per_shard: list,
     S = sharded.n_shards
     all_items = [it for sub in per_shard for it in sub]
     Bq = batch_lib._bucket_rows(max(len(sub) for sub in per_shard))
-    J = max((batch_lib._n_bitmaps(it) for it in all_items), default=1)
+    J = (key.fused[0] if key.fused else
+         max((batch_lib._n_bitmaps(it) for it in all_items), default=1))
     Ws = [batch_lib._assemble_bitmap(key, per_shard[sid],
                                      sharded.pools[sid], bp=Bq, j=J)[0]
           for sid in range(S)]
@@ -268,14 +280,19 @@ def _launch_bitmap_sharded(sharded: ShardedIndex, key, per_shard: list,
 def launch_groups_sharded(sharded: ShardedIndex, groups, *, n_queries: int,
                           backend: str = "jax", max_results: int = 1 << 16,
                           max_group_size: int = batch_lib.MAX_GROUP_SIZE,
-                          stats: dict | None = None
+                          stats: dict | None = None, timings=None
                           ) -> batch_lib.PendingBatch:
     """Dispatch every group chunk as one SPMD program across the shard
     devices, without materializing results (the fan-out half; the existing
     ``batch.collect_batch`` is the concatenate half — item part ordinals
-    order per-query results exactly as the single-device engine does)."""
+    order per-query results exactly as the single-device engine does).
+    With fused megagroups the per-batch dispatch collapse multiplies by
+    the shard count: one program per family covers *all* shards' rows.
+    ``timings`` splits per-shard assembly + glue from the program enqueue
+    (same contract as ``batch.launch_groups``)."""
     launched = []
-    n_programs = 0
+    n_dispatches = 0
+    c0 = batch_lib._compile_count() if stats is not None else 0
     for key, items in groups.items():
         per = [[] for _ in range(sharded.n_shards)]
         for it in items:
@@ -286,15 +303,24 @@ def launch_groups_sharded(sharded: ShardedIndex, groups, *, n_queries: int,
         width = max(len(sub) for sub in per)
         for lo in range(0, max(width, 1), step):
             sub = [s[lo: lo + step] for s in per]
+            t0 = time.perf_counter()
             if key.kind == "bitmap":
                 flat, vals, counts = _launch_bitmap_sharded(
                     sharded, key, sub, stats)
             else:
                 flat, vals, counts = _launch_svs_sharded(
                     sharded, key, sub, backend, stats)
+            if timings is not None:
+                # the sharded launchers interleave assembly and the single
+                # program call; attribute the whole span to assemble+glue
+                # and let `block` absorb device time, as §2.9 documents
+                timings.assemble += time.perf_counter() - t0
             launched.append((key, flat, vals, counts))
-            n_programs += 1
-    batch_lib.accumulate_launch_stats(stats, groups, n_programs)
+            n_dispatches += 1
+    batch_lib.accumulate_launch_stats(stats, groups, n_dispatches)
+    if stats is not None:
+        stats["n_compiles"] = (stats.get("n_compiles", 0)
+                               + batch_lib._compile_count() - c0)
     return batch_lib.PendingBatch(n_queries=n_queries,
                                   max_results=max_results,
                                   launched=launched, stats=stats)
@@ -304,24 +330,34 @@ def execute_sharded(sharded: ShardedIndex, queries: list, *,
                     batch_size: int = 32, depth: int = 2,
                     backend: str = "jax", max_results: int = 1 << 16,
                     max_group_size: int = batch_lib.MAX_GROUP_SIZE,
+                    fuse: bool = True,
+                    plan: "batch_lib.FusionPlan | None" = None,
                     stats: dict | None = None,
                     timings: "pipe_lib.StageTimings | None" = None
                     ) -> list[QueryResult]:
     """Answer ``queries`` against the sharded index, pipelined at ``depth``
     (DESIGN.md §2.9): every batch fans out to all shards in one dispatch
     and results concatenate in part order — byte-identical to
-    ``engine.query`` / ``batch.execute_batch`` on the unsharded index."""
+    ``engine.query`` / ``batch.execute_batch`` on the unsharded index.
+    ``fuse``/``plan`` coarsen each batch into megagroup families before
+    the fan-out (DESIGN.md §2.10), so the per-batch dispatch count is
+    O(#families) regardless of shard count."""
     pool_map = sharded.pool_map
+    if fuse and plan is None:
+        plan = batch_lib.FusionPlan()
 
     def schedule_fn(chunk, stats):
-        return batch_lib.schedule(sharded.index, chunk, pool=pool_map,
-                                  stats=stats)
+        groups = batch_lib.schedule(sharded.index, chunk, pool=pool_map,
+                                    stats=stats)
+        if fuse:
+            groups = batch_lib.fuse_groups(groups, plan=plan, stats=stats)
+        return groups
 
     def launch_fn(groups, n_queries, stats):
         return launch_groups_sharded(
             sharded, groups, n_queries=n_queries, backend=backend,
             max_results=max_results, max_group_size=max_group_size,
-            stats=stats)
+            stats=stats, timings=timings)
 
     return pipe_lib.execute_pipelined(
         sharded.index, queries, batch_size=batch_size, depth=depth,

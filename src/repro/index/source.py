@@ -145,7 +145,11 @@ def pad_block_ids(blk: np.ndarray, c_pad: int, k_pad: int) -> np.ndarray:
 # (they are the long head terms).  Keyed by ((part.uid, tid), pads) so
 # index rebuilds can't serve stale entries; LRU-bounded by total layout
 # ints (like the DecodeCache), since each entry pins a whole compressed
-# list.
+# list.  Under megagroup fusion (DESIGN.md §2.10) the arena assembler
+# requests layouts at *family-level* pads — the fused key's k/t/e
+# ceilings — and the sticky FusionPlan keeps those ceilings monotone, so
+# the family key space (and this memo) converges instead of fragmenting
+# per batch.
 _LAYOUT_CACHE: OrderedDict = OrderedDict()
 _LAYOUT_CACHE_BUDGET = 1 << 26      # total ints across cached layouts
 _layout_cache_size = 0
@@ -483,8 +487,10 @@ class ResidentPool:
     def layout_arena(self, pads: tuple, op: int) -> RowArena:
         """Arena of packed-layout operand ``op`` (word rows, widths,
         offsets, maxes, exc_pos, exc_add — the _compose_pk order minus the
-        candidate block ids) at group pads; slot 0 is the all-pad layout
-        whose blocks are never candidates."""
+        candidate block ids) at group pads — family-level ceilings when
+        the fused scheduler is driving (one arena set per family, not per
+        scheduled signature); slot 0 is the all-pad layout whose blocks
+        are never candidates."""
         a = self._arenas.get(("lay", pads, op))
         if a is None:
             k_pad, t_pad, e_pad = pads

@@ -34,8 +34,13 @@ GALLOP_VMEM_CAP = 1 << 20          # max f ints resident in VMEM (4 MiB)
 
 @jax.jit
 def pad_packed(flat_words, offsets):
-    """Gather flat (T,128) packed words into (K, 32, 128) block-padded form."""
+    """Gather flat (T,128) packed words into (K, 32, 128) block-padded form.
+    T == 0 must short-circuit: ``clip(..., 0, T-1)`` would clamp to index
+    -1 and ``jnp.take`` silently wraps negative indices, so an empty
+    payload would gather garbage instead of zero blocks."""
     T = flat_words.shape[0]
+    if T == 0:
+        return jnp.zeros((offsets.shape[0], ROWS, LANES), flat_words.dtype)
     idx = jnp.clip(offsets[:, None] + jnp.arange(ROWS, dtype=jnp.int32)[None],
                    0, T - 1)
     return jnp.take(flat_words, idx, axis=0)

@@ -7,7 +7,12 @@
                        --resident stages the device-resident index
                        (source.ResidentPool), --pipeline D double-buffers
                        batches at depth D with a per-stage timing breakdown
-                       (stage/dispatch/block; repro.index.pipeline)
+                       (stage/assemble/dispatch/block;
+                       repro.index.pipeline), --fuse (default) collapses
+                       each batch to O(1) fused megagroup programs
+                       (--no-fuse for the per-signature A/B), --warmup
+                       precompiles the fused family ladder before the
+                       timed run (AOT signature warmup, DESIGN.md §2.10)
   --arch <lm id>     : prefill + greedy decode on the smoke-reduced model
   --arch <recsys id> : batched scoring
 
@@ -66,6 +71,7 @@ def serve_index(args):
         from repro.index import pipeline as pipe_lib
 
         depth = args.pipeline
+        plan = batch_lib.FusionPlan() if args.fuse else None
 
         def run_all(stats=None, timings=None):
             stats = {} if stats is None else stats
@@ -73,28 +79,39 @@ def serve_index(args):
                 out = pipe_lib.execute_pipelined(
                     idx, queries, batch_size=args.batch, depth=depth,
                     backend=args.backend, cache=cache, pool=pool,
-                    stats=stats, timings=timings)
+                    fuse=args.fuse, plan=plan, stats=stats,
+                    timings=timings)
             else:
                 out = []
                 for lo in range(0, len(queries), args.batch):
                     out.extend(batch_lib.execute_batch(
                         idx, queries[lo: lo + args.batch],
                         backend=args.backend, cache=cache, pool=pool,
-                        stats=stats))
+                        fuse=args.fuse, plan=plan, stats=stats))
             return out, stats
 
-        # Warm to steady state: cache fills / pool staging change how terms
-        # resolve between passes (decoded vs packed), which changes group
-        # signatures — so repeat until no new program signature appears,
-        # otherwise the timed loop pays compile on its first batches.
-        warm_stats: dict = {}
-        seen = -1
-        for _ in range(4):
-            run_all(stats=warm_stats)
-            n_sigs = len(warm_stats.get("signatures", ()))
-            if n_sigs == seen:
-                break
-            seen = n_sigs
+        if args.warmup and args.fuse:
+            # AOT signature warmup: compile the fused family ladder before
+            # the first timed batch (DESIGN.md §2.10); the query stream is
+            # its own most representative sample
+            wu = batch_lib.warmup(idx, queries, plan=plan,
+                                  batch_size=args.batch,
+                                  backend=args.backend, pool=pool,
+                                  cache=cache)
+            print(f"[serve] warmup: {wu['n_compiles']} compiles over "
+                  f"{wu['n_signatures']} signatures in {wu['passes']} "
+                  f"passes ({wu['time_s']:.2f}s)")
+        else:
+            if args.warmup:
+                print("[serve] note: --warmup warms the fused family "
+                      "ladder; with --no-fuse the signature-fixed-point "
+                      "loop below covers it")
+            # Warm to steady state: cache fills / pool staging change how
+            # terms resolve between passes (decoded vs packed), which
+            # changes group signatures — so repeat until no new program
+            # signature appears, otherwise the timed loop pays compile on
+            # its first batches.
+            batch_lib.warm_to_fixed_point(lambda s: run_all(stats=s))
         timings = pipe_lib.StageTimings() if depth else None
         t0 = time.perf_counter()
         results, stats = run_all(timings=timings)
@@ -102,10 +119,15 @@ def serve_index(args):
         hits = sum(r.count for r in results)
         mode = (f"--pipeline {depth} (batch {args.batch})" if depth
                 else f"--batch {args.batch}")
-        print(f"[serve] paper-index {mode} ({args.backend}): "
+        n_batches = max((len(queries) + args.batch - 1) // args.batch, 1)
+        print(f"[serve] paper-index {mode} ({args.backend}"
+              f"{', fused' if args.fuse else ', unfused'}): "
               f"{len(queries)} queries, {len(queries) / dt:.1f} q/s "
               f"({dt / len(queries) * 1e3:.2f} ms/query), {hits} hits, "
-              f"{stats['n_programs']} device programs, "
+              f"{stats.get('n_dispatches', 0)} dispatches "
+              f"({stats.get('n_dispatches', 0) / n_batches:.1f}/batch, "
+              f"{len(stats.get('signatures', ()))} programs, "
+              f"{stats.get('n_compiles', 0)} compiles), "
               f"{stats.get('decoded_ints', 0) / len(queries):.0f} "
               f"decoded ints/query "
               f"({stats.get('skip_folds', 0)} skip folds, "
@@ -113,10 +135,13 @@ def serve_index(args):
               f"{idx.stats()['bits_per_int']:.2f} bits/int"
               f"{cache_note()}")
         if timings is not None:
-            tot = max(timings.stage + timings.dispatch + timings.block, 1e-9)
+            tot = max(timings.stage + timings.assemble + timings.dispatch
+                      + timings.block, 1e-9)
             print(f"[serve]   pipeline depth {depth}: "
                   f"stage {timings.stage * 1e3:.1f} ms "
                   f"({timings.stage / tot:.0%}), "
+                  f"assemble {timings.assemble * 1e3:.1f} ms "
+                  f"({timings.assemble / tot:.0%}), "
                   f"dispatch {timings.dispatch * 1e3:.1f} ms "
                   f"({timings.dispatch / tot:.0%}), "
                   f"block {timings.block * 1e3:.1f} ms "
@@ -174,35 +199,47 @@ def serve_index_sharded(args, corpus):
     queries = corpus.queries
     batch = args.batch if args.batch > 1 else 32
     depth = args.pipeline or 2
+    from repro.index import batch as batch_lib
+    plan = batch_lib.FusionPlan() if args.fuse else None
 
     def run_all(stats=None, timings=None):
         return shard_lib.execute_sharded(
             sharded, queries, batch_size=batch, depth=depth,
-            backend=args.backend, stats=stats, timings=timings)
+            backend=args.backend, fuse=args.fuse, plan=plan,
+            stats=stats, timings=timings)
 
-    # warm to signature fixed point (same rationale as the batched path)
-    warm_stats: dict = {}
-    seen = -1
-    for _ in range(4):
-        run_all(stats=warm_stats)
-        n_sigs = len(warm_stats.get("signatures", ()))
-        if n_sigs == seen:
-            break
-        seen = n_sigs
+    # warm to signature fixed point (same rationale as the batched path);
+    # with --warmup the compile accounting of the pass is reported
+    c0 = batch_lib._compile_count()
+    t0 = time.perf_counter()
+    n_sigs, passes = batch_lib.warm_to_fixed_point(
+        lambda s: run_all(stats=s))
+    if args.warmup:
+        print(f"[serve] warmup: {batch_lib._compile_count() - c0} compiles "
+              f"over {n_sigs} signatures in {passes} passes "
+              f"({time.perf_counter() - t0:.2f}s)")
     timings = pipe_lib.StageTimings()
     stats: dict = {}
     t0 = time.perf_counter()
     results = run_all(stats=stats, timings=timings)
     dt = time.perf_counter() - t0
     hits = sum(r.count for r in results)
+    n_batches = max((len(queries) + batch - 1) // batch, 1)
     print(f"[serve] paper-index --shards {args.shards} "
-          f"(batch {batch}, depth {depth}, {args.backend}): "
+          f"(batch {batch}, depth {depth}, {args.backend}"
+          f"{', fused' if args.fuse else ', unfused'}): "
           f"{len(queries)} queries, {len(queries) / dt:.1f} q/s "
           f"({dt / len(queries) * 1e3:.2f} ms/query), {hits} hits, "
-          f"{stats['n_programs']} device programs")
-    tot = max(timings.stage + timings.dispatch + timings.block, 1e-9)
+          f"{stats.get('n_dispatches', 0)} dispatches "
+          f"({stats.get('n_dispatches', 0) / n_batches:.1f}/batch, "
+          f"{len(stats.get('signatures', ()))} programs, "
+          f"{stats.get('n_compiles', 0)} compiles)")
+    tot = max(timings.stage + timings.assemble + timings.dispatch
+              + timings.block, 1e-9)
     print(f"[serve]   stage {timings.stage * 1e3:.1f} ms "
           f"({timings.stage / tot:.0%}), "
+          f"assemble {timings.assemble * 1e3:.1f} ms "
+          f"({timings.assemble / tot:.0%}), "
           f"dispatch {timings.dispatch * 1e3:.1f} ms "
           f"({timings.dispatch / tot:.0%}), "
           f"block {timings.block * 1e3:.1f} ms ({timings.block / tot:.0%})")
@@ -272,6 +309,16 @@ def main():
     ap.add_argument("--resident", action="store_true",
                     help="paper-index: stage the device-resident index "
                          "(source.ResidentPool) before serving")
+    ap.add_argument("--fuse", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="paper-index: coarsen each batch's groups into "
+                         "megagroup families — O(1) device programs per "
+                         "batch (--no-fuse keeps one program per shape "
+                         "signature; results are identical)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="paper-index: AOT signature warmup — precompile "
+                         "the fused family ladder before the timed run so "
+                         "steady-state serving never compiles")
     ap.add_argument("--cache", action="store_true",
                     help="paper-index: serve with a DecodeCache and report "
                          "its hit rate")

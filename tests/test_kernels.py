@@ -94,3 +94,21 @@ def test_kernel_vmem_budget():
     assert unpack_ws < 16 * 2**20
     gallop_ws = ops.GALLOP_VMEM_CAP * 4 + 2 * kb.LANES * 4
     assert gallop_ws <= 8 * 2**20                  # f table + r tile
+
+
+def test_pad_packed_empty_payload():
+    """Regression (ISSUE 5): with T == 0 flat words the old
+    clip(..., 0, T-1) produced index -1 and jnp.take silently wrapped;
+    the empty case must return all-zero blocks of the right shape."""
+    flat = jnp.zeros((0, kb.LANES), jnp.uint32)
+    for K in (0, 3):
+        out = ops.pad_packed(flat, jnp.zeros((K,), jnp.int32))
+        assert out.shape == (K, ops.ROWS, kb.LANES)
+        assert not np.asarray(out).any()
+    # non-empty payloads are untouched by the guard
+    flat = jnp.arange(2 * kb.LANES, dtype=jnp.uint32).reshape(2, kb.LANES)
+    out = ops.pad_packed(flat, jnp.zeros((1,), jnp.int32))
+    assert np.array_equal(np.asarray(out[0, :2]), np.asarray(flat))
+    assert np.array_equal(np.asarray(out[0, 2:]),
+                          np.broadcast_to(np.asarray(flat[1]),
+                                          (ops.ROWS - 2, kb.LANES)))

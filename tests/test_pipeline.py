@@ -158,8 +158,9 @@ def test_pipeline_timings_populated(uniform):
     _assert_identical(out, seq)
     assert tm.batches == (len(queries) + 3) // 4
     assert tm.stage >= 0 and tm.dispatch >= 0 and tm.block >= 0
-    assert set(tm.as_dict()) == {"stage_s", "dispatch_s", "block_s",
-                                 "batches"}
+    assert tm.assemble > 0          # launcher-attributed operand assembly
+    assert set(tm.as_dict()) == {"stage_s", "assemble_s", "dispatch_s",
+                                 "block_s", "batches"}
 
 
 # --------------------------------------------------------------------------
