@@ -53,6 +53,19 @@ mixed-signature corpus: device dispatches per batch fused vs unfused
 compile count after warmup (must be 0), and the fused/unfused throughput
 delta with everything else held fixed.
 
+A sixth section (``latency/``, ISSUE 6) measures *open-loop* serving: the
+continuous-batching server (``repro.launch.server``) fed by Poisson and
+bursty arrival processes at offered loads derived from the same run's
+measured drain capacity (0.5× and 0.8×) — closed-loop q/s says nothing
+about the p99 a user sees under arrival jitter.  Reported per load:
+p50/p99/p999 end-to-end latency, p99 time-in-queue, the max queue-depth
+bucket, and the shed count; the drain run doubles as the acceptance
+check that a warmed steady-state server compiles nothing and returns
+byte-identical results to the offline batched path.  ``--max-p99-ms``
+gates ``latency/p99_ms`` (Poisson at half capacity — a same-run-derived
+load, so the gate tracks the engine's latency behavior, not the absolute
+speed of the runner).
+
 Derived column reports queries/sec (and decoded ints/query where that is
 the figure of merit).  CLI: ``--smoke`` runs the reduced sweep standalone
 (CI smoke gate), ``--json PATH`` additionally records a machine-readable
@@ -434,11 +447,76 @@ def _sharded(quick: bool) -> None:
          f"{results['sharded/devices']} host devices")
 
 
+def _latency(quick: bool) -> None:
+    """Open-loop serving latency (ISSUE 6): the continuous-batching server
+    under Poisson / bursty arrivals at offered loads derived from this
+    run's measured drain capacity.  The drain run is also the acceptance
+    check: warmed steady state compiles nothing and serves byte-identical
+    results."""
+    import numpy as np
+    from repro.index import builder, corpus as corpus_lib, engine, source
+    from repro.index import batch as batch_lib
+    from repro.launch import server as server_lib
+
+    table = {k: corpus_lib.TABLE2_CLUEWEB[k] for k in (2, 3, 4, 5)}
+    n_docs = 1 << 14 if quick else 1 << 16
+    n_queries = 64 if quick else 256
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=11, table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    queries = corpus.queries
+    seq = [engine.query(idx, q) for q in queries]
+    pool = source.ResidentPool()
+    pool.warm(idx)
+    plan = batch_lib.FusionPlan()
+
+    # drain run: measures capacity AND gates the steady-state claims
+    results, srv = server_lib.serve_open_loop(
+        idx, queries, qps=0.0, warmup=True, pool=pool, plan=plan,
+        max_batch=32, max_queue=max(n_queries, 64))
+    for a, b in zip(results, seq):              # byte-identical gate
+        assert a.count == b.count and np.array_equal(a.docs, b.docs)
+    s = srv.metrics.summary()
+    drain_qps = s["qps"]
+    RESULTS["latency/drain_qps"] = round(drain_qps, 1)
+    RESULTS["latency/steady_compiles"] = srv.stats.get("n_compiles", 0)
+    RESULTS["latency/warmup_converged"] = int(srv.warm_report["converged"])
+    emit("engine/latency/drain", 1.0 / max(drain_qps, 1e-9),
+         f"{drain_qps:.1f} q/s {RESULTS['latency/steady_compiles']} "
+         f"steady-state compiles")
+
+    for pattern in ("poisson", "bursty"):
+        for frac, tag in ((0.5, "50"), (0.8, "80")):
+            offered = max(drain_qps * frac, 1.0)
+            out, srv = server_lib.serve_open_loop(
+                idx, queries, qps=offered, pattern=pattern, seed=17,
+                pool=pool, plan=plan, max_batch=32, max_wait_ms=2.0,
+                max_queue=max(n_queries, 64))
+            s = srv.metrics.summary()
+            key = f"latency/{pattern}{tag}"
+            RESULTS[f"{key}_p50_ms"] = round(s["p50_ms"], 2)
+            RESULTS[f"{key}_p99_ms"] = round(s["p99_ms"], 2)
+            RESULTS[f"{key}_p999_ms"] = round(s["p999_ms"], 2)
+            RESULTS[f"{key}_wait_p99_ms"] = round(s["wait_p99_ms"], 2)
+            RESULTS[f"{key}_shed"] = s["n_shed"]
+            RESULTS[f"{key}_queue_depth_max"] = max(
+                (int(k) for k, v in s["queue_depth_hist"].items() if v),
+                default=0)
+            emit(f"engine/{key}", s["p99_ms"] * 1e-3,
+                 f"{s['qps']:.1f} q/s @{offered:.0f} offered, p50 "
+                 f"{s['p50_ms']:.1f} / p99 {s['p99_ms']:.1f} / p99.9 "
+                 f"{s['p999_ms']:.1f} ms, {s['n_shed']} shed")
+    # the --max-p99-ms gate key: Poisson at half capacity (see docstring)
+    RESULTS["latency/p99_ms"] = RESULTS["latency/poisson50_p99_ms"]
+
+
 def run(quick: bool = False) -> None:
     _throughput(quick)
     _dispatch(quick)
     _skewed(quick)
     _sharded(quick)
+    _latency(quick)
 
 
 def compare(baseline_path: str, max_regress: float | None) -> int:
@@ -494,6 +572,11 @@ def main() -> None:
                          "than N device dispatches per mixed batch "
                          "(dispatch/per_batch_fused) — guards against a "
                          "regression back to per-signature dispatch")
+    ap.add_argument("--max-p99-ms", type=float, default=None, metavar="MS",
+                    help="fail (exit 2) if open-loop p99 latency at half "
+                         "the measured drain capacity (latency/p99_ms) "
+                         "exceeds MS milliseconds — the JSON artifact is "
+                         "still written on failure")
     ap.add_argument("--profile", action="store_true",
                     help="print the per-batch schedule/assemble/dispatch/"
                          "device breakdown of the fused resident pipeline "
@@ -522,6 +605,15 @@ def main() -> None:
         else:
             print(f"# dispatch gate passed: {per_batch} per batch "
                   f"(ceiling {args.max_dispatches})")
+    if args.max_p99_ms is not None:
+        p99 = RESULTS.get("latency/p99_ms")
+        if p99 is None or p99 > args.max_p99_ms:
+            print(f"# P99 GATE FAILED: {p99} ms open-loop p99 at half "
+                  f"capacity (ceiling {args.max_p99_ms} ms)")
+            rc = 2
+        else:
+            print(f"# p99 gate passed: {p99} ms (ceiling "
+                  f"{args.max_p99_ms} ms)")
     if args.json:
         payload = {
             "bench": "bench_engine",

@@ -839,6 +839,60 @@ class FusionPlan:
                     cur[i] = d
         return tuple(cur)
 
+    def covers(self, famid: tuple, dims: tuple) -> bool:
+        """Read-only peek: would ``raised(famid, dims)`` change anything?
+        True iff the family is known and every dim is within its sticky
+        ceiling — i.e. fusing a batch with these family dims launches only
+        already-established fused signatures."""
+        cur = self.dims.get(famid)
+        return cur is not None and all(d <= c for d, c in zip(dims, cur))
+
+
+def _families(groups: dict[GroupKey, list[_Item]]) -> dict[tuple, list]:
+    """Bucket scheduled groups into signature families — (kind, packed
+    block geometry) — the identity ``fuse_groups`` coarsens within."""
+    fams: dict[tuple, list] = {}
+    for key, items in groups.items():
+        geom = None if key.packed is None else (key.packed[4], key.packed[5])
+        fams.setdefault((key.kind, geom), []).append((key, items))
+    return fams
+
+
+def _family_dims(kind: str, geom, members: list) -> tuple:
+    """Ceiling dims of one family over its member (key, items) pairs — the
+    shared derivation ``fuse_groups`` raises through the sticky plan and
+    ``plan_covers`` peeks at.  Layout: bitmap -> (W, Jb); svs ->
+    (M, N, W, J, Jb[, k, t, c, e, Jp])."""
+    items = [it for _, mi in members for it in mi]
+    if kind == "bitmap":
+        return (max(k.words for k, _ in members),
+                _pow2_ceil(max(_n_bitmaps(it) for it in items)))
+    dims = [max(k.m_bucket for k, _ in members),
+            max(k.n_bucket for k, _ in members),
+            max(k.words for k, _ in members),
+            _pow2_ceil(max(len(it.folds) for it in items)),
+            _pow2_ceil(max(_n_bitmaps(it) for it in items))]
+    if geom is not None:
+        dims += [max(k.packed[i] for k, _ in members) for i in range(4)]
+        dims.append(_pow2_ceil(max(len(it.psrc) for it in items)))
+    return tuple(dims)
+
+
+def plan_covers(groups: dict[GroupKey, list[_Item]],
+                plan: FusionPlan | None) -> bool:
+    """Family-signature admission predicate (DESIGN.md §2.11): True iff
+    fusing ``groups`` under ``plan`` would not raise any sticky family
+    ceiling — i.e. the batch launches only fused signatures the plan has
+    already established (after ``warmup``, ones that are already
+    compiled).  The continuous-batching server uses this to account for
+    admission decisions that would stall a latency-bound batch on a
+    compile; it never changes the plan (read-only peek, evaluate BEFORE
+    ``fuse_groups`` makes the ceilings monotone over this batch)."""
+    if plan is None:
+        return False
+    return all(plan.covers((kind, geom), _family_dims(kind, geom, members))
+               for (kind, geom), members in _families(groups).items())
+
 
 def fuse_groups(groups: dict[GroupKey, list[_Item]],
                 plan: FusionPlan | None = None,
@@ -872,32 +926,16 @@ def fuse_groups(groups: dict[GroupKey, list[_Item]],
     stickiness widens it: fused decode volume is bounded by the observed
     workload, never by the index size.
     """
-    fams: dict[tuple, list] = {}
-    for key, items in groups.items():
-        geom = None if key.packed is None else (key.packed[4], key.packed[5])
-        fams.setdefault((key.kind, geom), []).append((key, items))
     fused: dict[GroupKey, list[_Item]] = {}
-    for (kind, geom), members in fams.items():
+    for (kind, geom), members in _families(groups).items():
         items = [it for _, mi in members for it in mi]
+        dims = _family_dims(kind, geom, members)
+        if plan is not None:
+            dims = plan.raised((kind, geom), dims)
         if kind == "bitmap":
-            dims = (max(k.words for k, _ in members),
-                    _pow2_ceil(max(_n_bitmaps(it) for it in items)))
-            if plan is not None:
-                dims = plan.raised((kind, geom), dims)
             w, jb = dims
             fkey = GroupKey("bitmap", 0, 0, w, "-", fused=(jb,))
         else:
-            dims = [max(k.m_bucket for k, _ in members),
-                    max(k.n_bucket for k, _ in members),
-                    max(k.words for k, _ in members),
-                    _pow2_ceil(max(len(it.folds) for it in items)),
-                    _pow2_ceil(max(_n_bitmaps(it) for it in items))]
-            if geom is not None:
-                dims += [max(k.packed[i] for k, _ in members)
-                         for i in range(4)]
-                dims.append(_pow2_ceil(max(len(it.psrc) for it in items)))
-            if plan is not None:
-                dims = list(plan.raised((kind, geom), tuple(dims)))
             m, n, w, j, jb = dims[:5]
             packed = (tuple(dims[5:9]) + geom) if geom is not None else None
             jp = dims[9] if geom is not None else 0
@@ -1101,23 +1139,30 @@ def synth_warmup_queries(index: HybridIndex, n: int, seed: int = 0,
     return queries
 
 
-def warm_to_fixed_point(run_fn, max_passes: int = 4) -> tuple[int, int]:
+def warm_to_fixed_point(run_fn, max_passes: int = 4
+                        ) -> tuple[int, int, bool]:
     """Repeat ``run_fn(stats)`` until a pass adds no new program signature
     (cache fills, pool staging, and sticky plan ceilings all change how
-    batches compile between passes).  Returns (n_signatures, passes) —
-    the one convergence rule shared by ``warmup`` and serve.py's warm
-    loops."""
+    batches compile between passes).  Returns (n_signatures, passes,
+    converged) — the one convergence rule shared by ``warmup`` and
+    serve.py's warm loops.  ``converged`` is False when the loop ran out
+    of ``max_passes`` while the last pass was still adding signatures: a
+    timed loop after a non-converged warm pays hidden compiles that
+    ``n_compiles == 0`` assertions on *later* batches silently miss, so
+    callers must surface it (serve.py / ``warmup`` warn)."""
     stats: dict = {}
     seen = -1
     passes = 0
+    converged = False
     for _ in range(max_passes):
         run_fn(stats)
         passes += 1
         n_sigs = len(stats.get("signatures", ()))
         if n_sigs == seen:
+            converged = True
             break
         seen = n_sigs
-    return len(stats.get("signatures", ())), passes
+    return len(stats.get("signatures", ())), passes, converged
 
 
 def warmup(index: HybridIndex, queries: list[list[int]] | None = None, *,
@@ -1140,9 +1185,13 @@ def warmup(index: HybridIndex, queries: list[list[int]] | None = None, *,
     whole signature ladder; fused it pays O(#families) compiles, all of
     them front-loaded here).
 
-    Returns ``{"n_compiles", "n_signatures", "passes", "time_s"}`` — the
-    compile count is measured from jax's jit caches, and a steady-state
-    serve loop after warmup should report ``n_compiles == 0``."""
+    Returns ``{"n_compiles", "n_signatures", "passes", "converged",
+    "time_s"}`` — the compile count is measured from jax's jit caches, and
+    a steady-state serve loop after warmup should report ``n_compiles ==
+    0``.  ``converged`` is False when the signature ladder was still
+    growing at ``max_passes`` (see ``warm_to_fixed_point``) — the
+    zero-compile steady-state claim does not hold then, and callers
+    should warn."""
     t0 = time.perf_counter()
     c0 = _compile_count()
     if queries is None:
@@ -1155,8 +1204,10 @@ def warmup(index: HybridIndex, queries: list[list[int]] | None = None, *,
                           pool=pool, fuse=True, plan=plan,
                           max_group_size=max_group_size, stats=stats)
 
-    n_signatures, passes = warm_to_fixed_point(one_pass, max_passes)
+    n_signatures, passes, converged = warm_to_fixed_point(one_pass,
+                                                          max_passes)
     return {"n_compiles": _compile_count() - c0,
             "n_signatures": n_signatures,
             "passes": passes,
+            "converged": converged,
             "time_s": time.perf_counter() - t0}

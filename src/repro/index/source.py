@@ -274,23 +274,52 @@ class RowArena:
     slot id no index ever takes) so its *shape* changes only O(log rows)
     times — the gather program recompiles per buffer shape, not per added
     row.  Rows are keyed by the same (part.uid, tid) identity the pool
-    uses; an arena never evicts (it is bounded by the decode-policy
-    working set, same as ``warm``)."""
+    uses.
+
+    Eviction (ISSUE 6): the pool's LRU eviction calls ``evict(key)`` so a
+    churned row's slot reverts to the identity row and lands on a free
+    list for the next ``slot()`` miss to reuse — without it every arena
+    held a device copy of every row *ever* staged, so real device memory
+    grew monotonically while the pool's ``resident_ints`` claimed the
+    budget held.  ``ints`` reports the *allocated* footprint (the
+    high-water row count — a freed slot's memory is only reclaimed when
+    the buffer next rebuilds), which is what the pool counts against its
+    capacity."""
 
     def __init__(self, identities: list, device=None):
         self.rows_np: list = list(identities)
         self.slots: dict = {}
         self.device = device
+        self.evictions = 0
+        self._free: list[int] = []
         self._buf = None
 
     def slot(self, key, make_np) -> int:
         s = self.slots.get(key)
         if s is None:
-            s = len(self.rows_np)
-            self.rows_np.append(make_np())
+            if self._free:
+                s = self._free.pop()
+                self.rows_np[s] = make_np()
+            else:
+                s = len(self.rows_np)
+                self.rows_np.append(make_np())
             self.slots[key] = s
             self._buf = None
         return s
+
+    def evict(self, key) -> int:
+        """Drop one row: its slot reverts to the identity row and is
+        reused by the next ``slot()`` miss, so churn stops growing the
+        buffer.  Dispatched gathers are unaffected — mutation rebuilds a
+        *new* device buffer; in-flight programs keep the old one.
+        Returns the ints the slot will stop pinning once reused."""
+        s = self.slots.pop(key, None)
+        if s is None:
+            return 0
+        self.rows_np[s] = self.rows_np[0]
+        self._free.append(s)
+        self.evictions += 1
+        return int(np.prod(self.rows_np[0].shape))
 
     @property
     def ints(self) -> int:
@@ -319,6 +348,20 @@ class ResidentPool:
     batch decodes it, so steady state converges to zero host decode either
     way.
 
+    Residency accounting (ISSUE 6 bugfix): everything the pool puts on
+    device is counted against ``capacity_ints`` — store entries *and*
+    their per-size pad memos (``pad_ints``, dropped and subtracted when
+    the entry evicts) *and* the arena / identity-row overhead
+    (``overhead_ints``), which the old accounting ignored entirely: a
+    churned pool's arenas kept a device copy of every row ever staged, so
+    real device memory could exceed the budget without bound while
+    ``stats()`` claimed otherwise.  Evicting a store entry now also
+    evicts its rows from every arena (slots go to a free list and are
+    reused, see ``RowArena.evict``).  ``stats()['device_ints']`` is the
+    full device-side footprint; ``resident_ints`` stays the store-entry
+    total (``staged_ints - evicted_ints == resident_ints`` remains an
+    invariant).
+
     Each entry keeps the host numpy copy alongside the device buffer: the
     scheduler's block-max skip search reads seed *values* on host, and a
     D2H sync per seed would serialize the very pipeline the pool feeds.
@@ -343,15 +386,34 @@ class ResidentPool:
         self.evicted_lists = 0
         self.evicted_ints = 0
         self.resident_ints = 0
+        self.pad_ints = 0              # current pad-memo ints (⊂ resident)
 
     # -- staging -----------------------------------------------------------
 
+    def overhead_ints(self) -> int:
+        """Device ints the pool holds *outside* the LRU store: identity
+        rows and the row arenas (allocated footprint — see RowArena)."""
+        return (sum(int(r.size) for r in self._pad_rows.values())
+                + sum(a.ints for a in self._arenas.values()))
+
+    def device_ints(self) -> int:
+        """The pool's full device-side footprint — what ``capacity_ints``
+        actually bounds (the store alone under-counts by the arena copies
+        of every resident row)."""
+        return self.resident_ints + self.overhead_ints()
+
     def _evict(self):
-        while self.resident_ints > self.capacity and len(self._store) > 1:
-            _, old = self._store.popitem(last=False)
+        while (self.device_ints() > self.capacity
+               and len(self._store) > 1):
+            key, old = self._store.popitem(last=False)
+            freed = old["ints"] + old["pad_ints"]
             self.evicted_lists += 1
-            self.evicted_ints += old["ints"]
-            self.resident_ints -= old["ints"]
+            self.evicted_ints += freed
+            self.resident_ints -= freed
+            self.pad_ints -= old["pad_ints"]
+            old["pads"].clear()            # drop the pad memos with the entry
+            for arena in self._arenas.values():
+                arena.evict(key)           # free the arena copies for reuse
 
     def stage(self, key, vals_np: np.ndarray, n: int,
               dev: jnp.ndarray | None = None):
@@ -366,7 +428,7 @@ class ResidentPool:
         elif self.device is not None and self.device not in dev.devices():
             dev = jax.device_put(dev, self.device)
         entry = {"dev": dev, "np": vals_np, "n": n,
-                 "pads": {}, "ints": int(vals_np.shape[0])}
+                 "pads": {}, "ints": int(vals_np.shape[0]), "pad_ints": 0}
         self._store[key] = entry
         self.staged_lists += 1
         self.staged_ints += entry["ints"]
@@ -382,7 +444,7 @@ class ResidentPool:
             entry = {"dev": jax.device_put(words_np, self.device),
                      "np": words_np,
                      "n": int(words_np.shape[0]), "pads": {},
-                     "ints": int(words_np.shape[0])}
+                     "ints": int(words_np.shape[0]), "pad_ints": 0}
             self._store[key] = entry
             self.staged_lists += 1
             self.staged_ints += entry["ints"]
@@ -418,13 +480,13 @@ class ResidentPool:
         if entry is not None and entry["dev"] is base:
             dev = entry["pads"].get(size)
             if dev is None:
-                grown = entry["ints"] + size
                 dev = jax.device_put(its.pad_to(entry["np"], size),
                                      self.device)
                 entry["pads"][size] = dev
+                entry["pad_ints"] += size
                 self.staged_ints += size
                 self.resident_ints += size
-                entry["ints"] = grown
+                self.pad_ints += size
                 self._evict()
             return dev
         return jnp.concatenate(
@@ -506,7 +568,11 @@ class ResidentPool:
 
     def arena_stats(self) -> dict:
         return {"arenas": len(self._arenas),
-                "arena_ints": sum(a.ints for a in self._arenas.values())}
+                "arena_ints": sum(a.ints for a in self._arenas.values()),
+                "arena_rows": sum(len(a.slots)
+                                  for a in self._arenas.values()),
+                "arena_evictions": sum(a.evictions
+                                       for a in self._arenas.values())}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -541,6 +607,9 @@ class ResidentPool:
                 "staged_ints": self.staged_ints,
                 "evicted_lists": self.evicted_lists,
                 "evicted_ints": self.evicted_ints,
+                "pad_ints": self.pad_ints,
+                "overhead_ints": self.overhead_ints(),
+                "device_ints": self.device_ints(),
                 "hits": self.hits, "misses": self.misses,
                 **self.arena_stats()}
 

@@ -35,8 +35,52 @@ import jax.numpy as jnp
 from repro.configs.base import get_config
 
 
+def coerce_index_flags(args) -> list[str]:
+    """Normalise paper-index flag interactions, returning one warning line
+    per coerced or ignored flag.
+
+    Earlier revisions rewrote flags silently (``--shards`` turned
+    ``--batch 1`` into 32 and dropped ``--cache`` with only a partial
+    note), so a user could not tell the run they asked for from the run
+    they got.  Every implied rewrite is now explicit; ``args`` is mutated
+    in place so the serving paths read the *effective* values."""
+    warnings = []
+    if args.shards:
+        if args.batch <= 1:
+            warnings.append(f"--shards implies batched mode: "
+                            f"--batch {args.batch} -> 32")
+            args.batch = 32
+        if not args.pipeline:
+            warnings.append("--shards implies pipelined serving: "
+                            "--pipeline 0 -> 2")
+            args.pipeline = 2
+        if args.cache:
+            warnings.append("--cache ignored with --shards (per-shard "
+                            "device residency supersedes the decode cache)")
+            args.cache = False
+        if not args.resident:
+            warnings.append("--shards implies the device-resident index: "
+                            "--resident on")
+            args.resident = True
+    elif args.pipeline:
+        if args.batch <= 1:
+            warnings.append(f"--pipeline implies batched mode: "
+                            f"--batch {args.batch} -> 32")
+            args.batch = 32
+        if not args.resident:
+            warnings.append("--pipeline implies the device-resident index: "
+                            "--resident on")
+            args.resident = True
+    if args.warmup and not args.fuse:
+        warnings.append("--warmup warms the fused family ladder; with "
+                        "--no-fuse the signature fixed-point loop covers it")
+    return warnings
+
+
 def serve_index(args):
     from repro.index import builder, corpus as corpus_lib, engine, source
+    for w in coerce_index_flags(args):
+        print(f"[serve] warning: {w}")
     corpus = corpus_lib.synthesize(n_docs=1 << 16, n_queries=args.queries,
                                    seed=5, shared_vocab=args.shared_vocab)
     if args.shards:
@@ -45,8 +89,6 @@ def serve_index(args):
                         codec_name="fastpfor-d1", B=16, n_parts=2)
     queries = corpus.queries
     cache = engine.DecodeCache() if args.cache else None
-    if args.pipeline and args.batch <= 1:
-        args.batch = 32                 # pipelining is a batched mode
     pool = None
     if args.resident or args.pipeline:
         pool = source.ResidentPool()
@@ -101,17 +143,23 @@ def serve_index(args):
             print(f"[serve] warmup: {wu['n_compiles']} compiles over "
                   f"{wu['n_signatures']} signatures in {wu['passes']} "
                   f"passes ({wu['time_s']:.2f}s)")
+            if not wu.get("converged", True):
+                print("[serve] warning: warmup stopped at max_passes "
+                      "before the signature ladder reached a fixed point "
+                      "— steady-state serving may still compile")
         else:
-            if args.warmup:
-                print("[serve] note: --warmup warms the fused family "
-                      "ladder; with --no-fuse the signature-fixed-point "
-                      "loop below covers it")
             # Warm to steady state: cache fills / pool staging change how
             # terms resolve between passes (decoded vs packed), which
             # changes group signatures — so repeat until no new program
             # signature appears, otherwise the timed loop pays compile on
             # its first batches.
-            batch_lib.warm_to_fixed_point(lambda s: run_all(stats=s))
+            n_sigs, passes, converged = batch_lib.warm_to_fixed_point(
+                lambda s: run_all(stats=s))
+            if not converged:
+                print(f"[serve] warning: signature warm loop stopped at "
+                      f"max_passes ({passes} passes, {n_sigs} signatures) "
+                      f"without converging — the timed run may pay hidden "
+                      f"compiles")
         timings = pipe_lib.StageTimings() if depth else None
         t0 = time.perf_counter()
         results, stats = run_all(timings=timings)
@@ -178,11 +226,6 @@ def serve_index_sharded(args, corpus):
     host-platform devices on CPU-only machines (must be set before jax
     initializes; with fewer devices, shards share them contiguously)."""
     from repro.index import builder, pipeline as pipe_lib, shard as shard_lib
-    if args.cache:
-        # per-shard device residency (ResidentPool) supersedes the decode
-        # cache: every decoded row is already staged on its shard's device
-        print("[serve] note: --cache has no effect with --shards "
-              "(per-shard device residency supersedes it)")
     t0 = time.perf_counter()
     sharded = builder.build_sharded(
         corpus.postings, corpus.n_docs, n_shards=args.shards,
@@ -197,8 +240,8 @@ def serve_index_sharded(args, corpus):
               f"parts {s['parts']}, {s['resident_lists']} lists "
               f"({s['resident_ints']} ints) resident")
     queries = corpus.queries
-    batch = args.batch if args.batch > 1 else 32
-    depth = args.pipeline or 2
+    batch = args.batch                  # coerce_index_flags normalised these
+    depth = args.pipeline
     from repro.index import batch as batch_lib
     plan = batch_lib.FusionPlan() if args.fuse else None
 
@@ -212,12 +255,16 @@ def serve_index_sharded(args, corpus):
     # with --warmup the compile accounting of the pass is reported
     c0 = batch_lib._compile_count()
     t0 = time.perf_counter()
-    n_sigs, passes = batch_lib.warm_to_fixed_point(
+    n_sigs, passes, converged = batch_lib.warm_to_fixed_point(
         lambda s: run_all(stats=s))
     if args.warmup:
         print(f"[serve] warmup: {batch_lib._compile_count() - c0} compiles "
               f"over {n_sigs} signatures in {passes} passes "
               f"({time.perf_counter() - t0:.2f}s)")
+    if not converged:
+        print(f"[serve] warning: signature warm loop stopped at max_passes "
+              f"({passes} passes, {n_sigs} signatures) without converging "
+              f"— the timed run may pay hidden compiles")
     timings = pipe_lib.StageTimings()
     stats: dict = {}
     t0 = time.perf_counter()

@@ -178,6 +178,57 @@ def test_pool_eviction_accounting(uniform):
     assert st["staged_ints"] - st["evicted_ints"] == st["resident_ints"]
 
 
+def test_pool_churn_bounds_device_footprint(uniform):
+    """ISSUE 6 regression: under eviction churn, the *full* device
+    footprint (store entries + pad memos + arena row copies) stops
+    growing — previously every arena kept a device copy of every row ever
+    staged and pad memos outlived their entries, so real device memory
+    grew without bound while ``resident_ints`` claimed the budget held."""
+    idx, queries, seq = uniform
+    pool = source.ResidentPool(capacity_ints=2048)      # tiny: forces churn
+    for _ in range(2):                                   # reach steady churn
+        _assert_identical(batch_lib.execute_batch(idx, queries, pool=pool),
+                          seq)
+    st1 = pool.stats()
+    assert st1["evicted_lists"] > 0
+    for _ in range(3):                                   # keep churning
+        _assert_identical(batch_lib.execute_batch(idx, queries, pool=pool),
+                          seq)
+    st2 = pool.stats()
+    assert st2["evicted_lists"] > st1["evicted_lists"]   # churn continued...
+    # ...but the allocated arena footprint stopped growing (slot reuse)
+    assert st2["arena_ints"] == st1["arena_ints"]
+    assert st2["overhead_ints"] == st1["overhead_ints"]
+    assert st2["arena_evictions"] > 0
+    # pad accounting has no drift: the aggregate counter equals the sum
+    # over live entries (evicted entries dropped their memos)
+    assert st2["pad_ints"] == sum(e["pad_ints"]
+                                  for e in pool._store.values())
+    assert all(not e["pads"] or e["pad_ints"] > 0
+               for e in pool._store.values())
+    # the store invariant survives the new accounting
+    assert st2["staged_ints"] - st2["evicted_ints"] == st2["resident_ints"]
+    assert st2["device_ints"] == st2["resident_ints"] + st2["overhead_ints"]
+
+
+def test_arena_evict_reuses_slots():
+    """RowArena.evict frees the slot for the next miss — allocated
+    footprint (and therefore the gather buffer shape) stays flat under
+    churn."""
+    a = source.RowArena([np.zeros(4, np.int32)])
+    s1 = a.slot("a", lambda: np.ones(4, np.int32))
+    a.slot("b", lambda: np.full(4, 2, np.int32))
+    ints0 = a.ints
+    assert a.evict("a") == 4
+    assert a.evict("missing") == 0
+    s3 = a.slot("c", lambda: np.full(4, 3, np.int32))
+    assert s3 == s1                         # freed slot reused
+    assert a.ints == ints0                  # no growth
+    assert a.evictions == 1
+    buf = np.asarray(a.buffer())
+    assert np.array_equal(buf[s3], np.full(4, 3, np.int32))
+
+
 def test_pool_warm_skips_long_skip_capable_lists(skewed):
     """warm() keeps skip-served lists compressed — residency must not
     silently decompress the index."""

@@ -1,0 +1,72 @@
+"""Flag-coercion coverage for the serving launcher (ISSUE 6 bugfix).
+
+``serve.py`` historically rewrote flag combinations silently (``--shards``
+turned ``--batch 1`` into 32 and dropped ``--cache`` with only a partial
+note); ``coerce_index_flags`` now makes every implied rewrite an explicit
+warning.  These tests pin the coercion table."""
+
+import argparse
+
+from repro.launch.serve import coerce_index_flags
+
+
+def _ns(**kw):
+    base = dict(batch=0, pipeline=0, shards=0, resident=False, fuse=True,
+                warmup=False, cache=False, queries=20, backend="jax",
+                shared_vocab=False, tokens=16)
+    base.update(kw)
+    return argparse.Namespace(**base)
+
+
+def test_plain_flags_pass_through_unwarned():
+    a = _ns(batch=64, pipeline=2, resident=True)
+    assert coerce_index_flags(a) == []
+    assert a.batch == 64 and a.pipeline == 2 and a.resident
+
+
+def test_sequential_mode_untouched():
+    a = _ns()
+    assert coerce_index_flags(a) == []
+    assert a.batch == 0 and not a.resident
+
+
+def test_shards_coerces_batch_pipeline_resident():
+    a = _ns(shards=2)
+    w = coerce_index_flags(a)
+    assert a.batch == 32 and a.pipeline == 2 and a.resident
+    assert len(w) == 3
+    assert any("--batch" in m for m in w)
+    assert any("--pipeline" in m for m in w)
+    assert any("--resident" in m for m in w)
+
+
+def test_shards_ignores_cache_with_warning():
+    a = _ns(shards=2, batch=64, pipeline=4, resident=True, cache=True)
+    w = coerce_index_flags(a)
+    assert not a.cache
+    assert len(w) == 1 and "--cache" in w[0]
+    assert a.batch == 64 and a.pipeline == 4      # explicit values kept
+
+
+def test_pipeline_implies_batched_and_resident():
+    a = _ns(pipeline=2)
+    w = coerce_index_flags(a)
+    assert a.batch == 32 and a.resident
+    assert len(w) == 2
+
+
+def test_pipeline_with_explicit_batch_keeps_it():
+    a = _ns(pipeline=3, batch=16, resident=True)
+    assert coerce_index_flags(a) == []
+    assert a.batch == 16 and a.pipeline == 3
+
+
+def test_warmup_without_fuse_warns():
+    a = _ns(batch=8, warmup=True, fuse=False)
+    w = coerce_index_flags(a)
+    assert len(w) == 1 and "--no-fuse" in w[0]
+
+
+def test_warmup_with_fuse_silent():
+    a = _ns(batch=8, warmup=True)
+    assert coerce_index_flags(a) == []

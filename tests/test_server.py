@@ -1,0 +1,239 @@
+"""Continuous-batching server coverage (ISSUE 6).
+
+Layers:
+  * differential guarantee: served results == offline ``execute_batch`` on
+    the same query multiset across {jax, pallas} × {fused, unfused} ×
+    shards {1, 2}, in drain and live (open-loop) modes, under any arrival
+    order,
+  * steady state: a warmed server reports n_compiles == 0 (skipped — not
+    vacuously passed — when jax lacks jit ``_cache_size``),
+  * the three loop policies: family-aligned admission after warmup,
+    deadline flush vs full flush, bounded-queue shedding,
+  * unit coverage for the arrival processes, ``batch.plan_covers`` and the
+    ``warm_to_fixed_point`` convergence flag.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.index import batch as batch_lib
+from repro.index import builder, corpus as corpus_lib, engine, source
+from repro.index import shard as shard_lib
+from repro.launch import server as server_lib
+
+pytestmark = pytest.mark.server
+
+
+# --------------------------------------------------------------------------
+# fixtures (mirrors tests/test_fusion.py)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def uniform():
+    corpus = corpus_lib.synthesize(n_docs=1 << 14, n_queries=10, seed=33)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    seq = [engine.query(idx, q) for q in corpus.queries]
+    return idx, corpus.queries, seq
+
+
+@pytest.fixture(scope="module")
+def mixed():
+    table = {k: corpus_lib.TABLE2_CLUEWEB[k] for k in (2, 3, 4, 5)}
+    corpus = corpus_lib.synthesize(n_docs=1 << 14, n_queries=32, seed=11,
+                                   table=table)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+    seq = [engine.query(idx, q) for q in corpus.queries]
+    return idx, corpus.queries, seq
+
+
+def _assert_identical(results, seq):
+    assert len(results) == len(seq)
+    for got, want in zip(results, seq):
+        assert got.count == want.count
+        assert got.docs.dtype == want.docs.dtype
+        assert np.array_equal(got.docs, want.docs)      # byte-identical
+
+
+
+# --------------------------------------------------------------------------
+# differential: served == offline, {backend} × {fuse} × {drain, live}
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("fuse", [True, False])
+def test_server_matches_offline(uniform, backend, fuse):
+    idx, queries, seq = uniform
+    results, srv = server_lib.serve_open_loop(
+        idx, queries, qps=0.0, backend=backend, fuse=fuse, max_batch=4)
+    assert srv.metrics.n_shed == 0
+    _assert_identical(results, seq)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_server_live_load_matches_offline(uniform, backend):
+    idx, queries, seq = uniform
+    results, srv = server_lib.serve_open_loop(
+        idx, queries, qps=2000.0, pattern="poisson", seed=3,
+        backend=backend, max_batch=4, max_queue=1024, max_wait_ms=1.0)
+    assert srv.metrics.n_shed == 0
+    _assert_identical(results, seq)
+    s = srv.metrics.summary()
+    assert s["n_done"] == len(queries)
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+    assert sum(s["queue_depth_hist"].values()) == len(queries)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_server_sharded_matches_offline(uniform, n_shards):
+    idx, queries, seq = uniform
+    sharded = shard_lib.shard_index(idx, n_shards)
+    results, srv = server_lib.serve_open_loop(
+        idx, queries, qps=0.0, sharded=sharded, max_batch=4)
+    _assert_identical(results, seq)
+
+
+def test_server_arrival_order_independent(mixed):
+    """Any packing of the same query multiset returns per-query results
+    identical to the sequential engine."""
+    idx, queries, seq = mixed
+    perm = np.random.default_rng(9).permutation(len(queries))
+    shuffled = [queries[i] for i in perm]
+    results, _ = server_lib.serve_open_loop(idx, shuffled, qps=0.0,
+                                            max_batch=8)
+    for out_i, src_i in enumerate(perm):
+        _assert_identical([results[out_i]], [seq[src_i]])
+
+
+def test_server_pool_composes(uniform):
+    idx, queries, seq = uniform
+    pool = source.ResidentPool()
+    pool.warm(idx)
+    results, srv = server_lib.serve_open_loop(idx, queries, qps=0.0,
+                                              pool=pool, max_batch=4)
+    _assert_identical(results, seq)
+    assert srv.stats.get("resident_hits", 0) > 0
+
+
+# --------------------------------------------------------------------------
+# steady state: warmed server compiles nothing
+# --------------------------------------------------------------------------
+
+def test_server_steady_state_zero_compiles(mixed):
+    if getattr(batch_lib._svs_program, "_cache_size", None) is None:
+        pytest.skip("this jax does not expose jit _cache_size — compile "
+                    "accounting unavailable (would pass vacuously)")
+    idx, queries, seq = mixed
+    pool = source.ResidentPool()
+    pool.warm(idx)
+    results, srv = server_lib.serve_open_loop(
+        idx, queries, qps=0.0, warmup=True, pool=pool, max_batch=8)
+    wu = srv.warm_report
+    assert wu["converged"] and wu["n_signatures"] > 0
+    # drain mode after warmup: deterministic full batches, zero compiles
+    assert srv.stats.get("n_compiles", 0) == 0
+    _assert_identical(results, seq)
+    # every flush was family-aligned (the sticky plan covered its groups
+    # before fusion — the property that makes steady state compile-free)
+    m = srv.metrics
+    assert m.unaligned_flushes == 0
+    assert m.aligned_flushes == m.n_flushes > 0
+
+
+# --------------------------------------------------------------------------
+# loop policies: flush reasons + backpressure
+# --------------------------------------------------------------------------
+
+def test_server_drain_mode_flushes_full_batches(mixed):
+    idx, queries, seq = mixed                   # 32 queries
+    results, srv = server_lib.serve_open_loop(idx, queries, qps=0.0,
+                                              max_batch=8)
+    m = srv.metrics
+    assert m.flush_deadline == 0                # drain mode never deadlines
+    assert m.flush_full + m.flush_drain == m.n_flushes == 4
+    _assert_identical(results, seq)
+
+
+def test_server_deadline_flush_fires(uniform):
+    """Arrivals far slower than max_wait: every batch launches on the
+    deadline (or the end-of-stream drain), never on max_batch."""
+    idx, queries, seq = uniform
+    results, srv = server_lib.serve_open_loop(
+        idx, queries, qps=200.0, pattern="uniform", max_batch=32,
+        max_wait_ms=0.5, max_queue=64)
+    m = srv.metrics
+    assert m.flush_full == 0
+    assert m.flush_deadline >= 1
+    assert srv.metrics.n_shed == 0
+    _assert_identical(results, seq)
+
+
+def test_server_bounded_queue_sheds(uniform):
+    """Open-loop arrivals that find the queue full are shed and counted —
+    submitting with no await between arrivals means the batcher never
+    runs, so exactly max_queue requests are admitted."""
+    idx, queries, seq = uniform
+    many = queries * 4
+    srv = server_lib.ContinuousBatchingServer(idx, max_batch=4, max_queue=4)
+    results = asyncio.run(srv.run(many, [0.0] * len(many)))
+    assert srv.metrics.n_shed == len(many) - 4
+    served = [r for r in results if r is not None]
+    assert len(served) == 4
+    _assert_identical(served, seq[:4])          # first 4 arrivals admitted
+    s = srv.metrics.summary()
+    assert s["n_shed"] == len(many) - 4
+
+
+# --------------------------------------------------------------------------
+# unit: arrival processes, plan_covers, convergence flag
+# --------------------------------------------------------------------------
+
+def test_arrival_gaps_shapes():
+    assert server_lib.arrival_gaps(5, 0.0) == [0.0] * 5
+    assert server_lib.arrival_gaps(0, 100.0) == []
+    u = server_lib.arrival_gaps(4, 100.0, "uniform")
+    assert u == [0.01] * 4
+    g = server_lib.arrival_gaps(2000, 100.0, "poisson", seed=1)
+    assert all(x >= 0 for x in g)
+    assert 0.005 < float(np.mean(g)) < 0.02     # mean ≈ 1/qps
+    b = server_lib.arrival_gaps(16, 100.0, "bursty", seed=1, burst=8)
+    assert all(x == 0.0 for x in b[1:8])        # within-burst: no gap
+    assert all(x == 0.0 for x in b[9:16])
+    with pytest.raises(ValueError):
+        server_lib.arrival_gaps(4, 100.0, "sawtooth")
+
+
+def test_plan_covers_predicate(mixed):
+    """The admission predicate: an empty plan covers nothing; after one
+    fused batch the sticky ceilings cover any narrower batch — checked
+    *before* fuse_groups raises ceilings."""
+    idx, queries, _ = mixed
+    plan = batch_lib.FusionPlan()
+    groups = batch_lib.schedule(idx, queries)
+    assert not batch_lib.plan_covers(groups, plan)
+    assert not batch_lib.plan_covers(groups, None)
+    batch_lib.fuse_groups(dict(groups), plan=plan)
+    sub = batch_lib.schedule(idx, queries[:3])
+    assert batch_lib.plan_covers(sub, plan)
+    assert batch_lib.plan_covers({}, plan)      # empty flush: nothing new
+
+
+def test_warm_to_fixed_point_reports_convergence():
+    calls = []
+
+    def never_settles(stats):
+        calls.append(1)
+        stats.setdefault("signatures", set()).add(len(calls))
+
+    n, passes, converged = batch_lib.warm_to_fixed_point(never_settles,
+                                                         max_passes=3)
+    assert passes == 3 and not converged and n == 3
+
+    def settles(stats):
+        stats.setdefault("signatures", set()).add(1)
+
+    n, passes, converged = batch_lib.warm_to_fixed_point(settles)
+    assert converged and n == 1 and passes == 2
