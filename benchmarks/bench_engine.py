@@ -21,13 +21,19 @@ several batch sizes.  Two regimes, as in the paper:
 Both regimes cover the pallas backend at b32, and the pipelined executor
 (depth 2) is asserted byte-identical to the sequential engine on both
 backends before it is timed (ISSUE 3 gate: uncached/batched_b32_qps ≥ 1.5×
-the PR-2 baseline of 258.6).  Caveat on the pallas columns since ISSUE 5:
-this container runs the kernels in *interpret mode*, whose cost scales
-with the number of interpreted kernel-grid invocations — megagroup fusion
-raises per-program padded shapes to family ceilings, so the interpreted
-columns drop even though results stay byte-identical; on real TPU
-hardware the padded lanes are vector work, not interpreter iterations.
-The jax-backend columns are the load-bearing throughput gates.
+the PR-2 baseline of 258.6).  Since ISSUE 7 every Pallas number carries an
+explicit ``<key>_kernel_mode`` field ("compiled" | "interpret", from
+``kernels.ops.kernel_mode()``): this container runs the kernels in
+*interpret mode*, whose cost scales with the number of interpreted
+kernel-grid invocations, so interpret timings measure the Pallas
+interpreter, not the engine — ``compare`` refuses to ratio-gate a key
+whose mode differs from the baseline, and ``--max-pallas-ratio`` is
+advisory unless the run was compiled (DESIGN.md §2.12).  The jax-backend
+columns are the load-bearing throughput gates.  The pallas backend itself
+runs the fused decode+intersect megakernels (one launch per fold stack);
+an interpret-mode occupancy guard (``batch.PALLAS_MIN_OCCUPANCY``)
+demotes sparsely occupied fused chunks to the jax program, which is why
+the interpret pallas columns track the jax ones at low occupancy.
 
 A third section replays a *skewed-ratio* log (tiny first term, very long
 second term) and reports decoded-ints/query with the posting-source skip
@@ -90,11 +96,27 @@ import time
 
 from benchmarks.common import emit
 
-RESULTS: dict[str, float] = {}
+RESULTS: dict[str, float | str] = {}
 
 # the --max-regress gate compares this speedup ratio (see module docstring)
 GATE_NUM = "cached/batched_b32_qps"
 GATE_DEN = "cached/sequential_qps"
+
+# the --max-pallas-ratio gate compares this same-run jax/pallas throughput
+# ratio on the fused packed (skewed) family; it hard-gates only when the
+# kernels ran compiled — interpret numbers are advisory (see _gate_pallas)
+PALLAS_GATE = "skewed/pallas_vs_jax_ratio"
+PALLAS_GATE_MODE = "skewed/batched_pallas_kernel_mode"
+
+
+def _kernel_mode() -> str:
+    """Execution mode of every Pallas number this run records.  Stored as
+    an explicit ``<key>_kernel_mode`` field next to each Pallas entry —
+    interpret-mode timings measure the Pallas interpreter, not the
+    hardware, and must never be ratio-gated against compiled ones
+    (``compare`` refuses; DESIGN.md §2.12)."""
+    from repro.kernels import ops as kernel_ops
+    return kernel_ops.kernel_mode()
 
 
 def _qps(fn, n_queries: int, reps: int = 3) -> float:
@@ -189,8 +211,9 @@ def _throughput(quick: bool) -> None:
         assert_identical(run_pallas())
         qps = _qps(run_pallas, len(queries))
         emit(f"engine/{regime}/batched_b32_pallas", 1.0 / qps,
-             f"{qps:.1f} q/s")
+             f"{qps:.1f} q/s [{_kernel_mode()}]")
         RESULTS[f"{regime}/batched_b32_pallas_qps"] = round(qps, 1)
+        RESULTS[f"{regime}/batched_b32_pallas_kernel_mode"] = _kernel_mode()
         # ISSUE 3 gate: pipelined output byte-identical on the pallas
         # backend too (timed pipelined coverage is the jax column above)
         assert_identical(pipe_lib.execute_pipelined(
@@ -349,14 +372,22 @@ def _skewed(quick: bool) -> None:
     emit("engine/skewed/partial_decode_ratio", 0.0, f"{ratio:.1f}x fewer")
     RESULTS["skewed/partial_decode_ratio"] = round(ratio, 1)
 
-    # pallas backend: identical results, decoded through the fused kernel
+    # pallas backend: identical results, decoded inside the fused
+    # decode+intersect megakernel (DESIGN.md §2.12)
     outp = batch_lib.execute_batch(idx, queries, backend="pallas")
     for a, b in zip(outp, seq):
         assert a.count == b.count and np.array_equal(a.docs, b.docs)
     dt = _qps(lambda: batch_lib.execute_batch(
         idx, queries, backend="pallas"), len(queries))
-    emit("engine/skewed/batched_pallas", 1.0 / dt, f"{dt:.1f} q/s")
+    emit("engine/skewed/batched_pallas", 1.0 / dt,
+         f"{dt:.1f} q/s [{_kernel_mode()}]")
     RESULTS["skewed/batched_pallas_qps"] = round(dt, 1)
+    RESULTS["skewed/batched_pallas_kernel_mode"] = _kernel_mode()
+    # same-run jax-over-pallas throughput ratio on this fused packed
+    # family — the --max-pallas-ratio gate key (1.0 = parity, lower =
+    # pallas wins); hard-gated only in compiled mode
+    RESULTS["skewed/pallas_vs_jax_ratio"] = round(
+        RESULTS["skewed/batched_skip_on_qps"] / max(dt, 1e-9), 2)
 
 
 def _sharded_worker(quick: bool) -> None:
@@ -519,10 +550,23 @@ def run(quick: bool = False) -> None:
     _latency(quick)
 
 
+def _mode_mismatch(key: str, bres: dict) -> bool:
+    """True when ``key`` is a Pallas entry whose kernel_mode differs between
+    baseline and this run — such pairs must never be ratio-gated (an
+    interpret number measures the interpreter, not the engine)."""
+    mk = key + "_kernel_mode"
+    if mk not in bres and mk not in RESULTS:
+        return False
+    return bres.get(mk) != RESULTS.get(mk)
+
+
 def compare(baseline_path: str, max_regress: float | None) -> int:
     """Print per-key deltas vs a committed baseline; with ``max_regress``
     also gate on the b32 batched-over-sequential speedup (see module
-    docstring for why the gate is a same-run ratio)."""
+    docstring for why the gate is a same-run ratio).  Pallas keys carry a
+    ``_kernel_mode`` sibling: when it differs between baseline and run the
+    delta is printed as NOT COMPARABLE and any gate over such a key is
+    refused rather than evaluated across modes."""
     with open(baseline_path) as fh:
         base = json.load(fh)
     bres = base.get("results", {})
@@ -533,11 +577,23 @@ def compare(baseline_path: str, max_regress: float | None) -> int:
             print(f"#   {key}: (new key) {new}")
         elif new is None:
             print(f"#   {key}: (missing in this run) baseline {old}")
+        elif isinstance(old, str) or isinstance(new, str):
+            tag = "" if old == new else "  (MODE CHANGED)"
+            print(f"#   {key}: {old} -> {new}{tag}")
+        elif _mode_mismatch(key, bres):
+            print(f"#   {key}: {old} -> {new} "
+                  f"(kernel-mode changed: NOT COMPARABLE)")
         else:
             pct = (new - old) / old * 100 if old else float("inf")
             print(f"#   {key}: {old} -> {new} ({pct:+.1f}%)")
     if max_regress is None:
         return 0
+    if _mode_mismatch(GATE_NUM, bres) or _mode_mismatch(GATE_DEN, bres):
+        print(f"# GATE REFUSED: {GATE_NUM}/{GATE_DEN} kernel mode differs "
+              f"from the baseline — interpret vs compiled Pallas numbers "
+              f"cannot be ratio-gated; regenerate the baseline in the "
+              f"current mode")
+        return 2
     try:
         new_ratio = RESULTS[GATE_NUM] / RESULTS[GATE_DEN]
         old_ratio = bres[GATE_NUM] / bres[GATE_DEN]
@@ -572,6 +628,16 @@ def main() -> None:
                          "than N device dispatches per mixed batch "
                          "(dispatch/per_batch_fused) — guards against a "
                          "regression back to per-signature dispatch")
+    ap.add_argument("--max-pallas-ratio", type=float, default=None,
+                    metavar="R",
+                    help="fail (exit 2) if the jax backend is more than R "
+                         "times faster than the pallas backend on the "
+                         "fused packed family (skewed/pallas_vs_jax_ratio, "
+                         "a same-run ratio) — ENFORCED only when the "
+                         "kernels ran compiled; in interpret mode the "
+                         "check is advisory (printed, never failing), "
+                         "because interpret timings measure the Pallas "
+                         "interpreter, not the engine")
     ap.add_argument("--max-p99-ms", type=float, default=None, metavar="MS",
                     help="fail (exit 2) if open-loop p99 latency at half "
                          "the measured drain capacity (latency/p99_ms) "
@@ -605,6 +671,23 @@ def main() -> None:
         else:
             print(f"# dispatch gate passed: {per_batch} per batch "
                   f"(ceiling {args.max_dispatches})")
+    if args.max_pallas_ratio is not None:
+        ratio = RESULTS.get(PALLAS_GATE)
+        kmode = RESULTS.get(PALLAS_GATE_MODE, "interpret")
+        if kmode != "compiled":
+            print(f"# pallas ratio gate ADVISORY (kernel_mode={kmode}): "
+                  f"jax/pallas = {ratio}x, target <= "
+                  f"{args.max_pallas_ratio}x — interpret-mode numbers are "
+                  f"never hard-gated; the gate enforces once the kernels "
+                  f"run compiled")
+        elif ratio is None or ratio > args.max_pallas_ratio:
+            print(f"# PALLAS RATIO GATE FAILED: jax/pallas = {ratio}x on "
+                  f"the fused packed family (ceiling "
+                  f"{args.max_pallas_ratio}x, compiled mode)")
+            rc = 2
+        else:
+            print(f"# pallas ratio gate passed: jax/pallas = {ratio}x "
+                  f"(ceiling {args.max_pallas_ratio}x, compiled mode)")
     if args.max_p99_ms is not None:
         p99 = RESULTS.get("latency/p99_ms")
         if p99 is None or p99 > args.max_p99_ms:

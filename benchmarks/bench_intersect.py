@@ -15,7 +15,51 @@ import jax.numpy as jnp
 from repro.core import bitpack
 from repro.core import intersect as its
 from repro.data.clusterdata import paired_lists
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, packed_fold_operands, timeit
+
+
+def fused_ab(quick: bool = False):
+    """Fused-vs-staged intersection A/B (ISSUE 7), at the high cardinality
+    ratios where the galloping regime lives: staged = kernel-decode the
+    whole long list then gallop-probe the materialized array; fused = the
+    decode+intersect megakernel (candidate blocks unpacked in kernel
+    scratch, no materialized array).  Reports ns per rare-list int and the
+    decoded ints the fused path avoids — cost-table inputs for the codec
+    autotuner planned in ROADMAP."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(9)
+    n = 1 << 18 if quick else 1 << 20
+    for ratio in ([1024] if quick else [256, 4096]):
+        m = max(n // ratio, 4)
+        r_l, f = paired_lists(rng, m, n)
+        pf = bitpack.encode(f, mode="d1")
+        r, valid, pk, active, c_pad = packed_fold_operands(
+            np.asarray(r_l, np.int32), pf)
+        per = pf.block_rows * 128
+
+        def staged():
+            vals = ops.decode_packed(pf).astype(jnp.int32)
+            return ops.intersect_gallop(r[0], vals)
+
+        def fused():
+            return ops.intersect_packed_fold(r, valid, pk, active,
+                                             mode="d1",
+                                             block_rows=pf.block_rows)
+
+        assert np.array_equal(
+            np.asarray(fused()),
+            np.asarray(staged()) & np.asarray(valid)), "A/B mismatch"
+        t_staged = timeit(staged, reps=2)
+        t_fused = timeit(fused, reps=2)
+        avoided = pf.padded_n - c_pad * per
+        emit(f"intersect/fused_ab/r{ratio}/staged", t_staged,
+             f"{t_staged / m * 1e9:.0f} ns/r-int; {pf.padded_n} decoded "
+             f"ints [{ops.kernel_mode()}]")
+        emit(f"intersect/fused_ab/r{ratio}/fused", t_fused,
+             f"{t_fused / m * 1e9:.0f} ns/r-int; {c_pad * per} decoded "
+             f"ints ({avoided} avoided, {t_staged / t_fused:.1f}x) "
+             f"[{ops.kernel_mode()}]")
 
 
 def run(quick: bool = False):
@@ -50,6 +94,7 @@ def run(quick: bool = False):
             t = timeit(fn)
             emit(f"intersect/r{ratio}/{name}", t,
                  f"{t_scalar / t:.2f}x vs scalar; m={m} n={n}")
+    fused_ab(quick)
 
 
 if __name__ == "__main__":

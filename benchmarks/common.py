@@ -33,3 +33,34 @@ def emit(name: str, seconds: float, derived: str = ""):
     row = f"{name},{seconds * 1e6:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def packed_fold_operands(r_np, plist):
+    """Stack one (rare row, compressed list) pair into the (Jp=1, B=1, ...)
+    operand tuple of ``kernels.ops.intersect_packed_fold`` — the megakernel
+    single-slot harness shared by the fused-vs-staged A/B sections of
+    bench_unpack / bench_intersect (ISSUE 7).  Returns (r, valid, pk,
+    active, c_pad) with r sentinel-padded to a 128-multiple pow2 bucket."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import bitpack, intersect as its
+
+    M = its.pow2_bucket(len(r_np))
+    r = jnp.asarray(its.pad_to(np.asarray(r_np, np.int32), M))[None]
+    k_pad = its.pow2_bucket(plist.widths.shape[0], floor=1)
+    t_pad = its.pow2_bucket(max(plist.flat_words.shape[0], 1), floor=1)
+    lay = bitpack.layout_np(plist, k_pad, t_pad, 0)
+    blk = bitpack.candidate_block_ids(np.asarray(plist.maxes), r_np)
+    c_pad = its.pow2_bucket(max(len(blk), 1), floor=1)
+    bl = np.full(c_pad, k_pad, np.int32)
+    bl[: len(blk)] = blk
+    pk = (jnp.asarray(lay.words)[None, None],
+          jnp.asarray(lay.widths)[None, None],
+          jnp.asarray(lay.offsets)[None, None],
+          jnp.asarray(lay.maxes)[None, None],
+          jnp.asarray(bl)[None, None],
+          jnp.full((1, 1, 0), -1, jnp.int32),
+          jnp.zeros((1, 1, 0), jnp.uint32))
+    valid = jnp.ones((1, M), bool)
+    active = jnp.ones((1, 1), bool)
+    return r, valid, pk, active, c_pad

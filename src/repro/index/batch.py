@@ -130,6 +130,19 @@ from repro.index.engine import QueryResult
 MAX_GROUP_SIZE = 128          # hard cap on items per device program
 GROUP_INT_BUDGET = 1 << 25    # cap operand ints per program: B·(J·N+M+J_b·W)
 BATCH_TILED_MAX_RATIO = 4.0   # vmapped tile-merge loses early exit; see above
+PALLAS_MIN_OCCUPANCY = 0.5    # interpret-mode kernel guard; see below
+
+# Interpret-mode Pallas executes every grid step on the host, so its cost
+# scales with the PADDED grid (Bp·(1+J+Jp) fused-family ceiling slots), not
+# the real payload — a sparsely occupied fused chunk can pay several times
+# its useful work in dead steps (the PR-5 fused-ceiling regression).  When
+# the kernels run in interpret mode and a chunk's occupancy (real rows +
+# folds over padded grid slots) falls below PALLAS_MIN_OCCUPANCY, the
+# launcher routes that one program through the jax backend instead —
+# byte-identical results (the mask-fold contract is backend-independent),
+# counted in stats["pallas_lowocc_fallbacks"].  Compiled mode skips the
+# guard: dead TPU grid steps retire in microseconds and kernel residency
+# is worth keeping (DESIGN.md §2.12).
 
 # Donating the candidate buffer lets XLA alias its pages for the output; it
 # is always freshly stacked per dispatch so nothing aliases it on the host.
@@ -403,25 +416,32 @@ def _svs_program(r, folds, fold_active, pk, pk_active, words, algo: str,
     valid = r != its.SENTINEL
     if folds.shape[0]:
         if backend == "pallas":
+            # fused megakernel: the whole J-fold stack in one launch
+            # (grid (B, J), mask accumulated in the revisited out block)
             from repro.kernels import ops as kernel_ops
-            fold_fn = kernel_ops.intersect_gallop_batch
-        elif algo == "tiled":
-            fold_fn = partial(its.intersect_tiled_batch,
-                              tile_r=min(128, r.shape[-1]),
-                              tile_f=min(1024, folds.shape[-1]))
+            valid = kernel_ops.intersect_fold_batch(r, valid, folds,
+                                                    fold_active)
         else:
-            fold_fn = its.intersect_gallop_batch
-        valid = _mask_fold_scan(r, valid, folds, fold_active, fold_fn)
+            if algo == "tiled":
+                fold_fn = partial(its.intersect_tiled_batch,
+                                  tile_r=min(128, r.shape[-1]),
+                                  tile_f=min(1024, folds.shape[-1]))
+            else:
+                fold_fn = its.intersect_gallop_batch
+            valid = _mask_fold_scan(r, valid, folds, fold_active, fold_fn)
     if pk is not None:
         if backend == "pallas":
+            # fused decode+intersect megakernel: unpack candidate blocks in
+            # kernel scratch, gallop, fold — one launch for the Jp stack,
+            # no materialized decoded array (DESIGN.md §2.12)
             from repro.kernels import ops as kernel_ops
-            packed_fn = kernel_ops.intersect_packed_batch
+            valid = kernel_ops.intersect_packed_fold(
+                r, valid, pk, pk_active, mode=mode, block_rows=block_rows)
         else:
-            packed_fn = its.intersect_packed_batch
-        valid = _mask_fold_scan(
-            r, valid, pk, pk_active,
-            lambda rr, op: packed_fn(rr, *op, mode=mode,
-                                     block_rows=block_rows))
+            valid = _mask_fold_scan(
+                r, valid, pk, pk_active,
+                lambda rr, op: its.intersect_packed_batch(
+                    rr, *op, mode=mode, block_rows=block_rows))
     if words is not None:
         def wstep(v, w):
             return jax.vmap(bm.probe)(w, r, v), None
@@ -667,6 +687,43 @@ def _assemble_svs(key: GroupKey, items: list[_Item],
     return R, F, active, pkparts, W, Bp, J, Jb
 
 
+def pallas_occupancy(key: GroupKey, items: list[_Item],
+                     bp: int | None = None) -> float:
+    """Fraction of the padded kernel grid that carries real work: (seed
+    rows + decoded folds + packed folds) over Bp·(1 + J + Jp) family-
+    ceiling slots.  This is exactly the ratio of useful to total grid
+    steps the fused megakernels execute for the chunk.  ``bp`` overrides
+    the batch bucket (the sharded launcher's grid is S·Bq rows)."""
+    B = len(items)
+    Bp = _bucket_rows(B) if bp is None else bp
+    if key.fused:
+        J, _, Jp = key.fused
+        Jp = Jp or 0
+    else:
+        J = max((len(it.folds or ()) for it in items), default=0)
+        Jp = max((len(it.psrc or ()) for it in items), default=0)
+    real = (B + sum(len(it.folds or ()) for it in items)
+            + sum(len(it.psrc or ()) for it in items))
+    return real / max(Bp * (1 + J + Jp), 1)
+
+
+def _effective_backend(key: GroupKey, items: list[_Item], backend: str,
+                       stats: dict | None = None,
+                       bp: int | None = None) -> str:
+    """Occupancy guard (see PALLAS_MIN_OCCUPANCY above): demote a sparsely
+    occupied chunk from interpret-mode pallas to the jax program.  Results
+    are identical either way; only the execution engine changes."""
+    if backend != "pallas":
+        return backend
+    from repro.kernels import ops as kernel_ops
+    if not kernel_ops.INTERPRET:
+        return backend
+    if pallas_occupancy(key, items, bp) < PALLAS_MIN_OCCUPANCY:
+        source._bump(stats, "pallas_lowocc_fallbacks")
+        return "jax"
+    return backend
+
+
 def _launch_svs_group(key: GroupKey, items: list[_Item], backend: str,
                       pool, stats: dict | None, timings=None):
     """Dispatch one svs device program; returns un-materialized device
@@ -675,6 +732,7 @@ def _launch_svs_group(key: GroupKey, items: list[_Item], backend: str,
     stays bounded by the signature space.  ``timings`` (a
     ``pipeline.StageTimings``) splits operand assembly from the async
     program enqueue."""
+    backend = _effective_backend(key, items, backend, stats)
     t0 = time.perf_counter()
     R, F, active, pkparts, W, Bp, J, Jb = _assemble_svs(key, items, pool)
     pk = pk_active = None

@@ -254,6 +254,10 @@ def _launch_svs_sharded(sharded: ShardedIndex, key, per_shard: list,
     if stats is not None:
         stats.setdefault("signatures", set()).add(
             ("svs-sharded", key, S, Bq, J, Jb))
+    # same interpret-mode occupancy guard as batch._launch_svs_group, at
+    # the sharded grid's S·Bq batch rows
+    backend = batch_lib._effective_backend(key, all_items, backend, stats,
+                                           bp=S * Bq)
     vals, counts = batch_lib._svs_program(
         R, F, active, pk, pk_active, W, key.algo, backend, mode, rows)
     return _flat_items(per_shard, Bq), vals, counts

@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core import bitpack as core_bitpack
+from repro.core import deltas as core_deltas
+
 ROWS = 32
 LANES = 128
 
@@ -98,6 +101,47 @@ def make_unpack_kernel(mode: str):
         out_ref[0] = out
 
     return kernel
+
+
+def decode_candidates(words, widths, offsets, maxes, blk, exc_pos, exc_add,
+                      *, mode: str, block_rows: int):
+    """In-kernel partial decode of one row's candidate blocks → a flat
+    sorted int32 window, SENTINEL-filled on pad slots.
+
+    This is the scratch-decode stage shared by the per-fold packed-gallop
+    kernel (``intersect_gallop.make_packed_gallop_kernel``) and the fused
+    megakernel (``megakernel.make_packed_fold_kernel``): gather each
+    candidate block's width/offset, bit-unpack its deltas with the same
+    shift/mask machinery as the Algorithm-1 kernel above (vectorized via
+    ``core.bitpack.unpack_deltas``), patch FastPFOR exceptions whose block
+    made the candidate list, and prefix-sum with the per-block seed.  All
+    operands are this row's VMEM-resident refs read inside a Pallas kernel
+    body; every shape is static so the whole stage traces into the kernel.
+
+    ``blk`` entries ≥ K_pad are pad candidates: they decode block K_pad−1
+    (harmlessly) and their ``per`` output lanes are overwritten with
+    SENTINEL, so the window stays sorted and the gallop probe can never
+    match a pad slot (DESIGN.md §2.6, §2.12)."""
+    from repro.core.intersect import SENTINEL
+    per = block_rows * LANES
+    Kp = maxes.shape[0]
+    C = blk.shape[0]
+    pad = blk >= Kp
+    ids = jnp.minimum(blk, Kp - 1)
+    seeds = jnp.where(ids > 0,
+                      jnp.take(maxes, jnp.maximum(ids - 1, 0)),
+                      jnp.uint32(0))
+    d = core_bitpack.unpack_deltas(words, jnp.take(widths, ids),
+                                   jnp.take(offsets, ids), block_rows)
+    if exc_pos is not None:
+        eb = exc_pos // per
+        slot = jnp.clip(jnp.searchsorted(blk, eb), 0, C - 1)
+        ok = (exc_pos >= 0) & (jnp.take(blk, slot) == eb)
+        tgt = jnp.where(ok, slot * per + exc_pos % per, C * per)
+        d = d.reshape(-1).at[tgt].add(exc_add, mode="drop").reshape(d.shape)
+    vals = core_deltas.prefix_sum(d, seeds, mode)
+    flat = vals.reshape(-1).astype(jnp.int32)         # (C·per,) sorted
+    return jnp.where(jnp.repeat(pad, per), SENTINEL, flat)
 
 
 @partial(jax.jit, static_argnames=("mode", "interpret"))

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import bitpack as core_bitpack
-from repro.core import deltas as core_deltas
+from repro.kernels import bitunpack as _bitunpack
 
 TILE_R = 128
 SENTINEL = np.int32(2**31 - 1)
@@ -126,29 +126,11 @@ def make_packed_gallop_kernel(mode: str, block_rows: int, n_exc: int):
     def kernel(r_ref, w_ref, wid_ref, off_ref, max_ref, blk_ref,
                ep_ref, ea_ref, out_ref):
         r = r_ref[0]                                  # (M,) int32
-        words = w_ref[0]                              # (Tp, 128) uint32
-        widths, offsets = wid_ref[0], off_ref[0]      # (Kp,)
-        maxes = max_ref[0]                            # (Kp,) uint32
-        blk = blk_ref[0]                              # (C,) int32
-        Kp = maxes.shape[0]
-        C = blk.shape[0]
-        pad = blk >= Kp
-        ids = jnp.minimum(blk, Kp - 1)
-        seeds = jnp.where(ids > 0,
-                          jnp.take(maxes, jnp.maximum(ids - 1, 0)),
-                          jnp.uint32(0))
-        d = core_bitpack.unpack_deltas(words, jnp.take(widths, ids),
-                                       jnp.take(offsets, ids), block_rows)
-        if n_exc:
-            ep, ea = ep_ref[0], ea_ref[0]             # (E,)
-            eb = ep // per
-            slot = jnp.clip(jnp.searchsorted(blk, eb), 0, C - 1)
-            ok = (ep >= 0) & (jnp.take(blk, slot) == eb)
-            tgt = jnp.where(ok, slot * per + ep % per, C * per)
-            d = d.reshape(-1).at[tgt].add(ea, mode="drop").reshape(d.shape)
-        vals = core_deltas.prefix_sum(d, seeds, mode)
-        flat = vals.reshape(-1).astype(jnp.int32)     # (C·per,) sorted
-        flat = jnp.where(jnp.repeat(pad, per), SENTINEL, flat)
+        C = blk_ref.shape[-1]
+        flat = _bitunpack.decode_candidates(          # (C·per,) sorted int32
+            w_ref[0], wid_ref[0], off_ref[0], max_ref[0], blk_ref[0],
+            ep_ref[0] if n_exc else None, ea_ref[0] if n_exc else None,
+            mode=mode, block_rows=block_rows)
         log2f = int(np.log2(C * per))
         out_ref[0] = _gallop_body(r, flat, log2f)
     return kernel

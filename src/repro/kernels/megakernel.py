@@ -1,0 +1,169 @@
+"""Pallas TPU megakernels: the whole SvS fold chain in ONE launch.
+
+The per-fold kernels in ``intersect_gallop.py`` run one intersect stage per
+``pallas_call``; the group program then scans J such launches, and each
+packed stage re-enters the kernel with a freshly staged operand set.  The
+megakernels here collapse the scan into the kernel grid (DESIGN.md §2.12):
+
+* ``decoded_fold_batched`` — grid (B, J).  Step (b, j) gallop-probes seed
+  row b against decoded fold j and ANDs the match mask into the row's
+  running validity mask.
+* ``packed_fold_batched`` — grid (B, Jp).  Step (b, j) gathers the
+  candidate blocks of row b's j-th *compressed* list, bit-unpacks them
+  into kernel scratch (``bitunpack.decode_candidates`` — the same
+  shift/mask machinery as the Algorithm-1 unpack kernel), patches
+  FastPFOR exceptions, prefix-sums deltas in-register, and gallop-probes
+  the seed row against the scratch window.  No decoded array is ever
+  materialized in HBM: decode volume per step is C·block ints of VMEM
+  scratch, freed when the step retires.
+
+Both kernels accumulate into the same output block: the out BlockSpec maps
+every j to row b's (1, M) mask block, the innermost grid axis revisits it
+J times, and ``pl.when(j == 0)`` seeds it from the incoming validity mask.
+TPU grids execute sequentially with the last axis innermost, so the
+revisited block stays resident in VMEM across the J steps and is flushed
+once per row — this is the mask-fold contract of DESIGN.md §2.10 moved
+inside the kernel, which is why ``collect_batch`` needs no changes.
+
+Inactive (j, b) slots (fused family arity ceilings pad J/Jp past each
+row's real fold count) AND ``True`` — their mask contribution is the
+identity, exactly like the host-side ``_mask_fold_scan``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bitpack as core_bitpack
+from repro.kernels import bitunpack as _bitunpack
+from repro.kernels.intersect_gallop import _gallop_body
+
+LANES = core_bitpack.LANES
+
+
+# --------------------------------------------------------------------------
+# decoded folds: unpacked short lists, one gallop per (row, fold)
+# --------------------------------------------------------------------------
+
+def make_decoded_fold_kernel(log2n: int):
+    def kernel(r_ref, v_ref, f_ref, act_ref, out_ref):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _seed_mask():
+            out_ref[0] = v_ref[0]
+
+        hit = _gallop_body(r_ref[0], f_ref[0, 0], log2n)
+        act = act_ref[0, 0] != 0
+        out_ref[0] = out_ref[0] & jnp.where(act, hit, True)
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def decoded_fold_batched(r, valid, folds, fold_active, interpret: bool = True):
+    """Fused decoded SvS fold: r (B, M) sentinel-padded int32, valid (B, M)
+    bool, folds (J, B, N) sentinel-padded with N a power of two,
+    fold_active (J, B).  Returns the (B, M) validity mask after ANDing all
+    J match masks — one kernel launch for the whole stack."""
+    J, B, N = folds.shape
+    M = r.shape[-1]
+    log2n = int(np.log2(N))
+    assert (1 << log2n) == N, "folds must be padded to a power of two"
+    row = lambda b, j: (b, 0)
+    grid_spec = pl.GridSpec(
+        grid=(B, J),                                 # j innermost: the out
+        in_specs=[                                   # block is revisited
+            pl.BlockSpec((1, M), row),
+            pl.BlockSpec((1, M), row),
+            pl.BlockSpec((1, 1, N), lambda b, j: (j, b, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (j, b)),
+        ],
+        out_specs=pl.BlockSpec((1, M), row),
+    )
+    return pl.pallas_call(
+        make_decoded_fold_kernel(log2n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.bool_),
+        interpret=interpret,
+    )(r.astype(jnp.int32), valid, folds.astype(jnp.int32),
+      fold_active.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# packed folds: decode + intersect fused, no materialized decoded array
+# --------------------------------------------------------------------------
+
+def make_packed_fold_kernel(mode: str, block_rows: int, n_exc: int):
+    per = block_rows * LANES
+
+    def kernel(r_ref, v_ref, w_ref, wid_ref, off_ref, max_ref, blk_ref,
+               ep_ref, ea_ref, act_ref, out_ref):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _seed_mask():
+            out_ref[0] = v_ref[0]
+
+        C = blk_ref.shape[-1]
+        flat = _bitunpack.decode_candidates(          # (C·per,) sorted int32
+            w_ref[0, 0], wid_ref[0, 0], off_ref[0, 0], max_ref[0, 0],
+            blk_ref[0, 0],
+            ep_ref[0, 0] if n_exc else None,
+            ea_ref[0, 0] if n_exc else None,
+            mode=mode, block_rows=block_rows)
+        hit = _gallop_body(r_ref[0], flat, int(np.log2(C * per)))
+        act = act_ref[0, 0] != 0
+        out_ref[0] = out_ref[0] & jnp.where(act, hit, True)
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("mode", "block_rows", "interpret"))
+def packed_fold_batched(r, valid, words, widths, offsets, maxes, blk_ids,
+                        exc_pos, exc_add, active, mode: str, block_rows: int,
+                        interpret: bool = True):
+    """Fused packed SvS fold.  r (B, M) sentinel-padded int32; valid (B, M)
+    bool; words (Jp, B, Tp, 128) uint32; widths/offsets/maxes (Jp, B, Kp);
+    blk_ids (Jp, B, C) with C·block_rows·128 a power of two; exc_pos /
+    exc_add (Jp, B, E) FastPFOR patches (-1-padded); active (Jp, B).
+    Returns the (B, M) validity mask after folding all Jp packed lists —
+    one kernel launch, decode scratch only, no decoded array in HBM."""
+    Jp, B, Tp, _ = words.shape
+    M = r.shape[-1]
+    C = blk_ids.shape[-1]
+    E = exc_pos.shape[-1]
+    per = block_rows * LANES
+    assert (C * per) & (C * per - 1) == 0, "C·per must be a power of two"
+    Kp = widths.shape[-1]
+    row = lambda b, j: (b, 0)
+    jb2 = lambda b, j: (j, b, 0)
+    grid_spec = pl.GridSpec(
+        grid=(B, Jp),                                # j innermost: the out
+        in_specs=[                                   # block is revisited
+            pl.BlockSpec((1, M), row),
+            pl.BlockSpec((1, M), row),
+            pl.BlockSpec((1, 1, Tp, LANES), lambda b, j: (j, b, 0, 0)),
+            pl.BlockSpec((1, 1, Kp), jb2),
+            pl.BlockSpec((1, 1, Kp), jb2),
+            pl.BlockSpec((1, 1, Kp), jb2),
+            pl.BlockSpec((1, 1, C), jb2),
+            pl.BlockSpec((1, 1, max(E, 1)), jb2),
+            pl.BlockSpec((1, 1, max(E, 1)), jb2),
+            pl.BlockSpec((1, 1), lambda b, j: (j, b)),
+        ],
+        out_specs=pl.BlockSpec((1, M), row),
+    )
+    ep = exc_pos if E else jnp.full((Jp, B, 1), -1, jnp.int32)
+    ea = exc_add if E else jnp.zeros((Jp, B, 1), jnp.uint32)
+    return pl.pallas_call(
+        make_packed_fold_kernel(mode, block_rows, E),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.bool_),
+        interpret=interpret,
+    )(r.astype(jnp.int32), valid, words, widths.astype(jnp.int32),
+      offsets.astype(jnp.int32), maxes, blk_ids.astype(jnp.int32),
+      ep, ea, active.astype(jnp.int32))

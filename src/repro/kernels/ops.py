@@ -1,8 +1,17 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``INTERPRET`` defaults to True (this container is CPU-only; the kernels target
-TPU v5e).  On real hardware set ``repro.kernels.ops.INTERPRET = False`` or the
-REPRO_PALLAS_INTERPRET=0 env var.
+Kernel execution mode (DESIGN.md §2.12): the kernels target TPU v5e, so
+at import we *probe* the runtime backend — compiled Mosaic lowering when
+``jax.default_backend() == "tpu"``, Pallas interpret mode everywhere else
+(this container is CPU-only).  The REPRO_PALLAS_INTERPRET env var is an
+explicit override in either direction (``0`` forces compiled, anything
+else forces interpret); ``set_kernel_mode("compiled"|"interpret"|"auto")``
+re-resolves at runtime (``serve.py --kernel-mode``).  ``INTERPRET`` stays
+the module-level switch every wrapper reads at call time, so existing
+``ops.INTERPRET = ...`` assignments keep working.  Benchmarks must record
+``kernel_mode()`` next to any Pallas number — interpret-mode timings are
+not comparable to compiled ones and the bench compare gate refuses to
+ratio across modes.
 """
 
 from __future__ import annotations
@@ -13,6 +22,7 @@ from functools import partial
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import bitpack as core_bitpack
 from repro.core import deltas as core_deltas
@@ -20,8 +30,44 @@ from repro.core.intersect import SENTINEL, pad_to, pow2_bucket  # noqa: F401
 from repro.kernels import bitunpack as _bitunpack
 from repro.kernels import bitpack_pack as _bitpack_pack
 from repro.kernels import intersect_gallop as _intersect_gallop
+from repro.kernels import megakernel as _megakernel
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+def probe_kernel_mode() -> str:
+    """Capability probe: can the runtime backend execute our Mosaic/TPU
+    kernels natively?  Compiled only on TPU — the kernels use TPU grid
+    semantics (sequential revisited output blocks, PrefetchScalarGridSpec),
+    so GPU/CPU fall back to interpret."""
+    return "compiled" if jax.default_backend() == "tpu" else "interpret"
+
+
+def resolve_kernel_mode(mode: str = "auto") -> str:
+    """Resolve a requested mode to 'compiled' | 'interpret'.  'auto' honors
+    the REPRO_PALLAS_INTERPRET env override when set, else the probe."""
+    if mode == "auto":
+        env = os.environ.get("REPRO_PALLAS_INTERPRET")
+        if env is not None:
+            return "interpret" if env != "0" else "compiled"
+        return probe_kernel_mode()
+    if mode not in ("compiled", "interpret"):
+        raise ValueError(f"unknown kernel mode {mode!r}")
+    return mode
+
+
+INTERPRET = resolve_kernel_mode() == "interpret"
+
+
+def kernel_mode() -> str:
+    """The effective execution mode of every kernel wrapper in this module."""
+    return "interpret" if INTERPRET else "compiled"
+
+
+def set_kernel_mode(mode: str = "auto") -> str:
+    """Set the module-wide kernel mode; returns the resolved mode."""
+    global INTERPRET
+    INTERPRET = resolve_kernel_mode(mode) == "interpret"
+    return kernel_mode()
+
 
 ROWS = _bitunpack.ROWS
 LANES = _bitunpack.LANES
@@ -147,3 +193,59 @@ def intersect_packed_batch(r, words, widths, offsets, maxes, blk_ids,
     return _intersect_gallop.packed_gallop_batched(
         r, words, widths, offsets, maxes, blk_ids, exc_pos, exc_add,
         mode=mode, block_rows=block_rows, interpret=INTERPRET)
+
+
+# --------------------------------------------------------------------------
+# fused fold megakernels (DESIGN.md §2.12)
+# --------------------------------------------------------------------------
+
+def _fold_scan(r, valid, stack, active, intersect_fn):
+    """VMEM-overflow fallback: per-fold kernel launches under a lax.scan,
+    same mask-fold semantics as the megakernels (and as
+    ``batch._mask_fold_scan``, which this mirrors to avoid a circular
+    import of the scheduler from the kernel layer)."""
+    def step(v, xs):
+        op, act = xs
+        hit = intersect_fn(r, op)
+        return v & jnp.where(act[:, None], hit, True), None
+
+    valid, _ = lax.scan(step, valid, (stack, active))
+    return valid
+
+
+def intersect_fold_batch(r, valid, folds, fold_active):
+    """Fused decoded SvS fold: ONE kernel launch ANDs the match masks of the
+    whole (J, B, N) fold stack into ``valid`` (grid (B, J), the output mask
+    block revisited across j).  Falls back to a scan of per-fold gallop
+    launches when a fold row exceeds the VMEM cap."""
+    if folds.shape[0] == 0:
+        return valid
+    if folds.shape[-1] > GALLOP_VMEM_CAP:
+        return _fold_scan(r, valid, folds, fold_active,
+                          intersect_gallop_batch)
+    return _megakernel.decoded_fold_batched(r, valid, folds, fold_active,
+                                            interpret=INTERPRET)
+
+
+def intersect_packed_fold(r, valid, pk, pk_active, mode: str,
+                          block_rows: int):
+    """Fused packed SvS fold: ONE kernel launch decodes each (j, b) slot's
+    candidate blocks in VMEM scratch and ANDs the gallop match masks of the
+    whole (Jp, B, ...) packed stack into ``valid`` — no materialized
+    decoded array (DESIGN.md §2.12).  ``pk`` is the stacked operand tuple
+    in ``batch._compose_pk`` order.  Falls back to a scan of per-fold
+    packed-gallop launches when one slot's scratch + resident compressed
+    words exceed the VMEM budget."""
+    words, widths, offsets, maxes, blk_ids, exc_pos, exc_add = pk
+    if words.shape[0] == 0:
+        return valid
+    per = block_rows * LANES
+    resident = blk_ids.shape[-1] * per + words.shape[-2] * LANES
+    if resident > GALLOP_VMEM_CAP:
+        return _fold_scan(
+            r, valid, pk, pk_active,
+            lambda rr, op: intersect_packed_batch(
+                rr, *op, mode=mode, block_rows=block_rows))
+    return _megakernel.packed_fold_batched(
+        r, valid, words, widths, offsets, maxes, blk_ids, exc_pos, exc_add,
+        pk_active, mode=mode, block_rows=block_rows, interpret=INTERPRET)

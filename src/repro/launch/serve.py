@@ -81,6 +81,12 @@ def serve_index(args):
     from repro.index import builder, corpus as corpus_lib, engine, source
     for w in coerce_index_flags(args):
         print(f"[serve] warning: {w}")
+    from repro.kernels import ops as kernel_ops
+    kmode = kernel_ops.set_kernel_mode(getattr(args, "kernel_mode", "auto"))
+    if args.backend == "pallas":
+        print(f"[serve] pallas kernel mode: {kmode}"
+              + (" (interpret — timings not comparable to compiled; "
+                 "see DESIGN.md §2.12)" if kmode == "interpret" else ""))
     corpus = corpus_lib.synthesize(n_docs=1 << 16, n_queries=args.queries,
                                    seed=5, shared_vocab=args.shared_vocab)
     if args.shards:
@@ -341,6 +347,13 @@ def main():
                     help="paper-index: >1 enables batched scheduler; "
                          "lm/recsys: batch size (default 4)")
     ap.add_argument("--backend", choices=["jax", "pallas"], default="jax")
+    ap.add_argument("--kernel-mode", choices=["auto", "compiled", "interpret"],
+                    default="auto",
+                    help="Pallas kernel execution mode: auto probes the "
+                         "runtime backend (compiled Mosaic on TPU, "
+                         "interpret elsewhere; REPRO_PALLAS_INTERPRET "
+                         "overrides); compiled/interpret force it "
+                         "(DESIGN.md §2.12)")
     ap.add_argument("--pipeline", type=int, default=0, metavar="DEPTH",
                     help="paper-index: double-buffered pipelined serving "
                          "with DEPTH batches in flight (implies the "
