@@ -1,22 +1,74 @@
 """Paper Table 3: decoding speed + bits/int on ClusterData, dense
 (2^16 ints in [0, 2^19)) and sparse (2^16 ints in [0, 2^30)), for every
-codec, plus the delta entropy and a memcpy reference row."""
+codec, plus the delta entropy and a memcpy reference row.
+
+``--json PATH`` additionally writes the machine-readable cost table the
+build-time storage autotuner consumes (builder.CostModel; DESIGN.md
+§2.13): per-codec ``decode_ns_per_int`` (mean of the dense/sparse
+profiles), a measured ``gallop_ns_per_probe`` (vectorized searchsorted
+over a 2^16-int list), and the ``kernel_mode`` the numbers were taken
+under — interpret-mode Pallas timings are not comparable to compiled
+ones, so the mode is part of the table's provenance.  Paste the fields
+into ``configs/paper_index.DEFAULT_COST_TABLE`` to refresh the shipped
+defaults, or pass the path straight to ``builder.build(cost_table=...)``.
+"""
 
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import codecs
+from repro.core import codecs, intersect as its
 from repro.data.clusterdata import clusterdata, delta_entropy
+from repro.kernels import ops
 from benchmarks.common import emit, timeit
 
+# codec names the cost table keys on (builder.CostModel.decode_ns covers
+# family fallbacks, so one -d1 entry per family is enough)
+COST_CODECS = ("bp-d1", "bp8-d1", "fastpfor-d1", "streamvbyte-d1",
+               "composite-d1", "varint")
 
-def run(quick: bool = False):
+
+def _measure_dispatch(rng, slopes: dict[str, float]) -> dict[str, float]:
+    """Fixed per-decode overhead (ns) per codec: time a 128-int decode and
+    subtract the linear term.  This is the term that decides short lists —
+    a device decode pays its dispatch before the first int lands, a host
+    (varint/composite-tail) decode does not."""
+    n = 128
+    x = np.sort(rng.choice(1 << 18, n, replace=False)).astype(np.int64)
+    out = {}
+    for name in COST_CODECS:
+        if name == "composite-d1":
+            continue                       # derived from bp8 + varint parts
+        c = codecs.get_codec(name)
+        enc = c.encode(x)
+        t = timeit(lambda c=c, enc=enc: c.decode(enc))
+        out[name] = max(t * 1e9 - n * slopes.get(name, 0.0), 0.0)
+    return out
+
+
+def _measure_gallop(rng) -> float:
+    """ns per probe of the vectorized gallop (searchsorted) over a
+    2^16-int sorted list — the skip path's unit cost."""
+    n = 1 << 16
+    f = jnp.asarray(np.sort(rng.choice(1 << 30, n, replace=False))
+                    .astype(np.int32))
+    r = jnp.asarray(np.sort(rng.choice(1 << 30, 4096, replace=False))
+                    .astype(np.int32))
+    t = timeit(lambda: its.intersect_gallop(r, f))
+    return t * 1e9 / 4096
+
+
+def run(quick: bool = False, json_path: str | None = None):
     rng = np.random.default_rng(1)
     n = 1 << 16
     names = (["bp-d1", "bp-dv", "fastpfor-d1", "varint"] if quick
              else codecs.ALL_CODECS)
+    # decode ns/int per codec per profile, for the --json cost table
+    ns_per_int: dict[str, dict[str, float]] = {}
     for label, bits in (("dense", 19), ("sparse", 30)):
         x = clusterdata(rng, n, bits)
         emit(f"decode/{label}/entropy", 0.0,
@@ -24,17 +76,54 @@ def run(quick: bool = False):
         xd = jnp.asarray(x.astype(np.int32))
         t = timeit(lambda: xd.copy())
         emit(f"decode/{label}/copy", t, f"{n / t / 1e9:.2f} Gints/s")
-        for name in names:
+        cost_names = [c for c in COST_CODECS if c not in names]
+        for name in names + cost_names:
             c = codecs.get_codec(name)
             enc = c.encode(x)
             if name == "varint":           # scalar host decode (paper's
                 t = timeit(lambda: c.decode(enc), reps=1)   # scalar baseline)
             else:
                 t = timeit(lambda: c.decode(enc))
-            emit(f"decode/{label}/{name}", t,
-                 f"{n / t / 1e9:.3f} Gints/s; {c.bits_per_int(enc):.1f} "
-                 f"bits/int")
+            ns_per_int.setdefault(name, {})[label] = t * 1e9 / n
+            if name in names:
+                emit(f"decode/{label}/{name}", t,
+                     f"{n / t / 1e9:.3f} Gints/s; {c.bits_per_int(enc):.1f} "
+                     f"bits/int")
+    if json_path is None:
+        return
+    gallop_ns = _measure_gallop(rng)
+    emit("decode/gallop", gallop_ns * 1e-9, f"{gallop_ns:.1f} ns/probe")
+    slopes = {name: sum(prof.values()) / len(prof)
+              for name, prof in ns_per_int.items()}
+    dispatch = _measure_dispatch(rng, slopes)
+    for name, ns in sorted(dispatch.items()):
+        emit(f"decode/dispatch/{name}", ns * 1e-9, f"{ns / 1e3:.0f} us/list")
+    table = {
+        "decode_ns_per_int": {
+            name: round(sum(prof.values()) / len(prof), 3)
+            for name, prof in ns_per_int.items()
+        },
+        "dispatch_ns_per_list": {
+            name: round(ns, 1) for name, ns in dispatch.items()
+        },
+        "decode_ns_per_int_by_profile": {
+            name: {k: round(v, 3) for k, v in prof.items()}
+            for name, prof in ns_per_int.items()
+        },
+        "gallop_ns_per_probe": round(gallop_ns, 1),
+        "space_ns_per_byte": 2.0,
+        "kernel_mode": ops.kernel_mode(),
+    }
+    with open(json_path, "w") as fh:
+        json.dump(table, fh, indent=2)
+        fh.write("\n")
+    print(f"cost table -> {json_path}", flush=True)
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the autotuner cost table (CostModel JSON)")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

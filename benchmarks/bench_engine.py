@@ -542,10 +542,88 @@ def _latency(quick: bool) -> None:
     RESULTS["latency/p99_ms"] = RESULTS["latency/poisson50_p99_ms"]
 
 
+def _compression(quick: bool) -> None:
+    """Storage autotuner A/B (ISSUE 8): the ``codec_name="auto"`` build vs
+    the all-bitpack reference (``bp-d1`` with the varint tail rule off) on
+    a Table-2-shaped corpus, whose skewed query-log list lengths leave most
+    lists short.  Reports bytes/int and per-codec list counts for both
+    builds, asserts the autotuned index byte-identical to the reference on
+    both backends, and measures the short-list (< 1024 ints) decode wall
+    clock per build — the dispatch-cost term the autotuner's CostModel
+    scores on (DESIGN.md §2.13).  ``compression/auto_bytes_per_int`` is
+    the ``--max-bytes-per-int`` gate key."""
+    import time
+
+    import jax
+    import numpy as np
+    from repro.core import codecs as codec_lib
+    from repro.index import builder, corpus as corpus_lib
+    from repro.index import batch as batch_lib
+
+    n_docs = 1 << 15 if quick else 1 << 16
+    n_queries = 24 if quick else 40
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=3)
+    builds = {
+        "auto": builder.build(corpus.postings, corpus.n_docs,
+                              codec_name="auto", B=16, n_parts=2),
+        "bp": builder.build(corpus.postings, corpus.n_docs,
+                            codec_name="bp-d1", B=16, n_parts=2,
+                            varint_tail_below=0),
+    }
+    queries = corpus.queries
+    oracle = None
+    for label, idx in builds.items():
+        st = idx.stats()
+        counts = " ".join(f"{k}:{v}" for k, v in
+                          sorted(st["codec_counts"].items()))
+        emit(f"engine/compression/{label}_bytes_per_int", 0.0,
+             f"{st['bytes_per_int']:.2f} B/int [{counts}]")
+        RESULTS[f"compression/{label}_bytes_per_int"] = round(
+            st["bytes_per_int"], 3)
+        for fam, cnt in sorted(st["codec_counts"].items()):
+            RESULTS[f"compression/{label}_lists_{fam}"] = cnt
+        for backend in ("jax", "pallas"):
+            out = batch_lib.execute_batch(idx, queries, backend=backend)
+            if oracle is None:
+                oracle = out                      # the reference build's
+            for a, b in zip(out, oracle):         # results, jax backend
+                assert a.count == b.count and np.array_equal(a.docs, b.docs)
+        dt = _qps(lambda idx=idx: batch_lib.execute_batch(idx, queries),
+                  len(queries))
+        emit(f"engine/compression/{label}_batched", 1.0 / dt,
+             f"{dt:.1f} q/s")
+        RESULTS[f"compression/{label}_qps"] = round(dt, 1)
+        # short-list decode wall clock: every "list" payload under 1024
+        # ints, decoded through the per-payload registry — the term the
+        # autotuner's dispatch-cost model targets
+        shorts = [tp.payload for part in idx.parts
+                  for tp in part.terms.values()
+                  if tp.kind == "list" and tp.n < 1024]
+        def decode_all(shorts=shorts):
+            for p in shorts:
+                jax.block_until_ready(codec_lib.codec_for(p).decode(p))
+        decode_all()                              # warm jit caches
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            decode_all()
+            best = min(best, time.perf_counter() - t0)
+        us = best * 1e6 / max(len(shorts), 1)
+        emit(f"engine/compression/{label}_short_decode", us * 1e-6,
+             f"{us:.0f} us/list over {len(shorts)} short lists")
+        RESULTS[f"compression/{label}_short_decode_us"] = round(us, 1)
+    win = (RESULTS["compression/bp_short_decode_us"]
+           / max(RESULTS["compression/auto_short_decode_us"], 1e-9))
+    emit("engine/compression/short_decode_win", 0.0, f"{win:.1f}x")
+    RESULTS["compression/short_decode_win"] = round(win, 2)
+
+
 def run(quick: bool = False) -> None:
     _throughput(quick)
     _dispatch(quick)
     _skewed(quick)
+    _compression(quick)
     _sharded(quick)
     _latency(quick)
 
@@ -638,6 +716,12 @@ def main() -> None:
                          "check is advisory (printed, never failing), "
                          "because interpret timings measure the Pallas "
                          "interpreter, not the engine")
+    ap.add_argument("--max-bytes-per-int", type=float, default=None,
+                    metavar="B",
+                    help="fail (exit 2) if the autotuned build stores more "
+                         "than B bytes per posting int "
+                         "(compression/auto_bytes_per_int) — guards the "
+                         "storage autotuner's compression win")
     ap.add_argument("--max-p99-ms", type=float, default=None, metavar="MS",
                     help="fail (exit 2) if open-loop p99 latency at half "
                          "the measured drain capacity (latency/p99_ms) "
@@ -688,6 +772,18 @@ def main() -> None:
         else:
             print(f"# pallas ratio gate passed: jax/pallas = {ratio}x "
                   f"(ceiling {args.max_pallas_ratio}x, compiled mode)")
+    if args.max_bytes_per_int is not None:
+        bpi = RESULTS.get("compression/auto_bytes_per_int")
+        ref = RESULTS.get("compression/bp_bytes_per_int")
+        if bpi is None or bpi > args.max_bytes_per_int:
+            print(f"# BYTES/INT GATE FAILED: autotuned build stores {bpi} "
+                  f"B/int (ceiling {args.max_bytes_per_int}; all-bitpack "
+                  f"reference {ref})")
+            rc = 2
+        else:
+            print(f"# bytes/int gate passed: autotuned {bpi} B/int "
+                  f"(ceiling {args.max_bytes_per_int}; all-bitpack "
+                  f"reference {ref})")
     if args.max_p99_ms is not None:
         p99 = RESULTS.get("latency/p99_ms")
         if p99 is None or p99 > args.max_p99_ms:

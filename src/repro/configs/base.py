@@ -41,9 +41,17 @@ def all_arch_ids() -> list[str]:
     return sorted(_REGISTRY)
 
 
+_loaded = False
+
+
 def _ensure_loaded():
-    if _REGISTRY:
+    # a real flag, not `if _REGISTRY`: importing any single config module
+    # directly (e.g. paper_index for DEFAULT_COST_TABLE) pre-registers one
+    # arch, which must not short-circuit loading the rest
+    global _loaded
+    if _loaded:
         return
+    _loaded = True
     from repro.configs import (  # noqa: F401
         gemma_7b, phi3_medium_14b, internlm2_1_8b, granite_moe_1b, kimi_k2,
         graphsage_reddit, mind, sasrec, din, bert4rec, paper_index)

@@ -14,3 +14,39 @@ SPEC = register(ArchSpec(
     },
     source="Lemire, Boytsov, Kurz 2014 (this paper)",
 ))
+
+# Default measured cost table for the build-time storage autotuner
+# (builder.CostModel; DESIGN.md §2.13).  Regenerate with
+# ``python -m benchmarks.bench_decode --json <path>`` and paste the
+# ``decode_ns_per_int`` / ``gallop_ns_per_probe`` fields here — these
+# numbers were measured on this container (kernel_mode=interpret; mean of
+# the dense/sparse ClusterData profiles at 2^16 ints).  Varint is the
+# deliberate scalar-loop baseline, which is why its per-int cost sits ~30x
+# above the vectorized codecs.  Builds work without a local bench run
+# because this table ships with the repo.
+DEFAULT_COST_TABLE = {
+    "decode_ns_per_int": {
+        "bp-d1": 13.4,
+        "bp8-d1": 13.4,
+        "fastpfor-d1": 15.3,
+        "streamvbyte-d1": 20.9,
+        "composite-d1": 19.7,
+        "varint": 562.4,
+    },
+    # fixed per-decode overhead (ns/list): device decodes pay a dispatch
+    # before the first int lands; host decodes (varint, composite tail)
+    # do not — this term is what hands short lists to composite on
+    # *measured* wall clock (builder._decode_cost derives composite from
+    # its bp8-head + varint-tail parts, so no entry is needed here).
+    "dispatch_ns_per_list": {
+        "bp-d1": 245700.0,
+        "bp8-d1": 215100.0,
+        "fastpfor-d1": 253900.0,
+        "streamvbyte-d1": 375600.0,
+        "varint": 6100.0,
+    },
+    "gallop_ns_per_probe": 18.9,
+    # weight converting stored bytes into cost units (ns per byte): the
+    # knob trading storage against decode speed in the autotuner score.
+    "space_ns_per_byte": 2.0,
+}

@@ -1,15 +1,26 @@
-"""Codec registry (paper §3's scheme zoo, by name).
+"""Codec registry (paper §3's scheme zoo, by name *and* by payload type).
 
 Names mirror the paper: ``bp-<mode>`` is the S4-BP128 family at TPU block
 geometry, ``bp-<mode>-ni`` the two-pass (non-integrated) variant,
-``fastpfor-<mode>`` the patched family, ``varint`` the scalar baseline.
+``fastpfor-<mode>`` the patched family, ``varint`` the scalar baseline,
+``streamvbyte-<mode>`` the byte-oriented lane-parallel codec (arXiv
+1709.08990) and ``composite-<mode>`` the bitpack-blocks + varint-tail pair
+(SNIPPETS.md §1 shape).
+
+``codec_for`` / ``family_of`` resolve a codec from a *payload* object —
+the per-list dispatch the storage autotuner relies on (DESIGN.md §2.13):
+an index may mix codec families per posting list, so decode and storage
+accounting key on what each payload actually is, not on the index-level
+codec name.  ``get_codec("auto")`` returns the default family for the few
+legacy call sites that still thread an index-level codec around; every
+payload-bearing path resolves through the registry.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import bitpack, fastpfor, varint
+from repro.core import bitpack, composite, fastpfor, streamvbyte, varint
 from repro.core.deltas import MODES
 
 
@@ -64,10 +75,48 @@ class _VarintCodec:
         return varint.bits_per_int(vl)
 
 
+class _SVBCodec:
+    def __init__(self, mode: str, block_rows: int = streamvbyte.DEFAULT_ROWS):
+        self.mode, self.block_rows = mode, block_rows
+
+    def encode(self, values):
+        return streamvbyte.encode(values, mode=self.mode,
+                                  block_rows=self.block_rows)
+
+    def decode(self, sl):
+        return streamvbyte.decode(sl)
+
+    def decode_np(self, sl):
+        return streamvbyte.decode_np(sl)
+
+    def bits_per_int(self, sl):
+        return streamvbyte.bits_per_int(sl)
+
+
+class _CompositeCodec:
+    def __init__(self, mode: str, block_rows: int = composite.DEFAULT_ROWS):
+        self.mode, self.block_rows = mode, block_rows
+
+    def encode(self, values):
+        return composite.encode(values, mode=self.mode,
+                                block_rows=self.block_rows)
+
+    def decode(self, cl):
+        return composite.decode(cl)
+
+    def decode_np(self, cl):
+        return composite.decode_np(cl)
+
+    def bits_per_int(self, cl):
+        return composite.bits_per_int(cl)
+
+
 def get_codec(name: str):
     name = name.lower()
     if name == "varint":
         return _VarintCodec()
+    if name == "auto":      # per-list dispatch happens via codec_for
+        return _BPCodec("d1")
     parts = name.split("-")
     fam = parts[0]
     mode = parts[1] if len(parts) > 1 else "d1"
@@ -79,7 +128,42 @@ def get_codec(name: str):
         return _BPCodec(mode, integrated="ni" not in parts, block_rows=8)
     if fam == "fastpfor":
         return _PForCodec(mode)
+    if fam in ("streamvbyte", "svb"):
+        return _SVBCodec(mode)
+    if fam == "composite":
+        return _CompositeCodec(mode)
     raise ValueError(f"unknown codec {name!r}")
+
+
+def codec_for(payload):
+    """Resolve the decode/accounting codec from a payload object (per-list
+    registry dispatch — mixed-codec indexes key on payload type)."""
+    if isinstance(payload, fastpfor.PatchedList):
+        return _PForCodec(payload.mode, payload.block_rows)
+    if isinstance(payload, bitpack.PackedList):
+        return _BPCodec(payload.mode, block_rows=payload.block_rows)
+    if isinstance(payload, varint.VarintList):
+        return _VarintCodec()
+    if isinstance(payload, streamvbyte.SVBList):
+        return _SVBCodec(payload.mode, payload.block_rows)
+    if isinstance(payload, composite.CompositeList):
+        return _CompositeCodec(payload.mode, payload.block_rows)
+    return None
+
+
+def family_of(payload) -> str:
+    """Codec family name of a payload (per-codec list-count reporting)."""
+    if isinstance(payload, fastpfor.PatchedList):
+        return "fastpfor"
+    if isinstance(payload, bitpack.PackedList):
+        return "bp8" if payload.block_rows == 8 else "bp"
+    if isinstance(payload, varint.VarintList):
+        return "varint"
+    if isinstance(payload, streamvbyte.SVBList):
+        return "streamvbyte"
+    if isinstance(payload, composite.CompositeList):
+        return "composite"
+    return "unknown"
 
 
 ALL_CODECS = (
@@ -87,4 +171,6 @@ ALL_CODECS = (
     + [f"bp-{m}" for m in ("d1", "d2", "d4", "dm", "dv")]
     + [f"bp-{m}-ni" for m in ("d1", "d2", "d4", "dm", "dv")]
     + [f"fastpfor-{m}" for m in ("d1", "d2", "d4", "dm", "dv")]
+    + [f"streamvbyte-{m}" for m in ("d1", "d2", "d4", "dm", "dv")]
+    + ["composite-d1"]
 )

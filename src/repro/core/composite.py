@@ -1,0 +1,88 @@
+"""Composite codec: bitpack for full blocks, varint for the tail.
+
+The SNIPPETS.md §1 shape — ``CompositeCodec<FastPFor, VariableByte>`` — from
+the reference C++ libraries: block codecs only compress multiples of their
+block size, so a composite pairs one with a byte-oriented tail codec for
+the remainder.  Here the head is the seed S4-BP128 layout
+(``bitpack.PackedList`` over the longest full-block prefix, zero padding
+waste by construction) and the tail is the scalar varint baseline
+(``varint.VarintList`` over the < block-size remainder), so short and
+odd-length lists stop paying full-block padding.
+
+The head alone is skip-capable, but the composite payload deliberately is
+*not* (no top-level ``flat_words``/``maxes``): a skip probe over the head
+would silently drop tail postings.  Composite lists therefore always serve
+through ``DecodedSource`` — the autotuner only picks this codec for lists
+short enough that the decode policy would apply anyway.
+
+Tail values are coded absolute (varint's D1-from-0 framing): the first tail
+delta then equals the first tail value, costing ≤ 5 bytes once per list —
+cheaper than threading a seed through the varint container format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import bitpack
+from repro.core import varint as varint_lib
+
+LANES = 128
+DEFAULT_ROWS = 8           # 1024-int head blocks (the bp8 geometry)
+
+
+@dataclasses.dataclass
+class CompositeList:
+    head: bitpack.PackedList | None   # full blocks only; None when n < block
+    tail: varint_lib.VarintList       # remainder (may be zero-length)
+    n: int
+    mode: str = "d1"
+    block_rows: int = DEFAULT_ROWS
+
+    @property
+    def n_head(self) -> int:
+        return 0 if self.head is None else self.head.n
+
+    @property
+    def padded_n(self) -> int:
+        return self.n_head + self.tail.n
+
+
+def encode(values: np.ndarray, mode: str = "d1",
+           block_rows: int = DEFAULT_ROWS) -> CompositeList:
+    v = np.asarray(values, dtype=np.int64).ravel()
+    n = int(v.size)
+    per = block_rows * LANES
+    n_head = (n // per) * per
+    head = (bitpack.encode(v[:n_head], mode=mode, block_rows=block_rows)
+            if n_head else None)
+    tail = varint_lib.encode(v[n_head:])
+    return CompositeList(head=head, tail=tail, n=n, mode=mode,
+                         block_rows=block_rows)
+
+
+def decode_np(cl: CompositeList) -> np.ndarray:
+    """Exact-length host decode: bucketed head decode + scalar tail."""
+    parts = []
+    if cl.head is not None:
+        parts.append(np.asarray(bitpack.decode_bucketed(cl.head))
+                     [: cl.head.n].astype(np.int64))
+    if cl.tail.n:
+        parts.append(varint_lib.decode(cl.tail))
+    if not parts:
+        return np.zeros(0, np.int64)
+    return np.concatenate(parts)
+
+
+def decode(cl: CompositeList) -> np.ndarray:
+    return decode_np(cl)
+
+
+def bits_per_int(cl: CompositeList) -> float:
+    bits = 0.0
+    if cl.head is not None:
+        bits += bitpack.bits_per_int(cl.head) * cl.head.n
+    bits += varint_lib.bits_per_int(cl.tail) * cl.tail.n
+    return bits / max(cl.n, 1)

@@ -1,0 +1,149 @@
+"""Stream VByte coding (Lemire, Kurz & Rupp, arXiv 1709.08990), TPU-adapted.
+
+Classic VByte interleaves continuation bits with data bytes, so a decoder
+must inspect every byte before it knows where the next integer starts.
+Stream VByte removes that serial dependency by *separating the streams*: a
+control stream holds one 2-bit code per integer (code = byte length − 1,
+lengths 1–4), and a data stream holds the raw little-endian value bytes
+with no continuation bits.  All byte lengths of a group are then known
+up-front, which is what makes the decode lane-parallel: control codes →
+per-lane byte widths → prefix-summed byte offsets → gathered shift/mask
+reconstruction (the SIMD shuffle of the paper becomes a vector gather on
+TPU tile geometry).
+
+Layout here: values are grouped into blocks of ``block_rows``×128 (default
+one row — 128 integers per block, so short tail-heavy lists pay at most 127
+padded deltas), delta-coded per block with the standard mode family
+(``core.deltas``) and a scalar per-block seed = previous block's last value,
+exactly like the bitpack layouts.  The control stream is stored as uint32
+words (16 codes per word, little-endian byte order, so code *i* of a block
+sits at bit ``2·(i mod 16)`` of word ``i // 16``) and the data stream as a
+flat uint32 word view of the byte stream — both device-friendly 32-bit
+carriers.  Per-block metadata: data-stream byte offset (``doffs``, the
+scalar-prefetch operand of the Pallas decoder) and block max (seeds).
+
+The batched device decoders live in ``kernels/svb_decode.py`` (pure-jnp
+batched path + the Pallas kernel); the host encoder and a numpy reference
+decode live here.  SVBList is *not* skip-capable (no packed word/width
+layout), so these lists always serve through ``DecodedSource`` — group
+signatures and the megakernel path are untouched by codec choice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import deltas as deltas_lib
+
+LANES = 128
+DEFAULT_ROWS = 1           # 128-int blocks: tail padding stays negligible
+
+
+@dataclasses.dataclass
+class SVBList:
+    """Host representation of one Stream-VByte-compressed sorted list."""
+    ctrl: np.ndarray       # (K, CW) uint32 — 16 2-bit codes per word
+    data: np.ndarray       # (DW,) uint32  — LE byte stream, zero-padded
+    doffs: np.ndarray      # (K,) int32    — data byte offset per block
+    maxes: np.ndarray      # (K,) uint32   — last value per block (seeds)
+    nbytes: int            # true data-stream byte count (accounting)
+    n: int
+    mode: str = "d1"
+    block_rows: int = DEFAULT_ROWS
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.ctrl.shape[0])
+
+    @property
+    def padded_n(self) -> int:
+        return self.num_blocks * self.block_rows * LANES
+
+
+def _byte_lens(d: np.ndarray) -> np.ndarray:
+    """Byte length (1–4) of each uint32 delta."""
+    d = d.astype(np.uint32)
+    return (1 + (d >= (1 << 8)).astype(np.int64)
+            + (d >= (1 << 16)).astype(np.int64)
+            + (d >= (1 << 24)).astype(np.int64))
+
+
+def encode(values: np.ndarray, mode: str = "d1",
+           block_rows: int = DEFAULT_ROWS) -> SVBList:
+    """Compress a sorted 1-D array of non-negative ints (< 2**32)."""
+    v = np.asarray(values, dtype=np.int64).ravel()
+    n = int(v.size)
+    if n == 0:
+        v = np.zeros(1, dtype=np.int64)
+    per = block_rows * LANES
+    npad = (-len(v)) % per
+    if npad:
+        v = np.concatenate([v, np.full(npad, v[-1], dtype=np.int64)])
+    K = len(v) // per
+    blocks = v.reshape(K, block_rows, LANES)
+    maxes = blocks[:, -1, -1].astype(np.uint32)
+    seeds = np.concatenate([[0], maxes[:-1].astype(np.int64)])
+    d = deltas_lib.encode_deltas_np(blocks, seeds, mode).reshape(-1)
+
+    lens = _byte_lens(d)                               # (K*per,)
+    # control stream: 2-bit codes, 4 per byte, LE bytes → uint32 words
+    codes = (lens - 1).astype(np.uint8).reshape(-1, 4)
+    ctrl_bytes = (codes[:, 0] | (codes[:, 1] << 2)
+                  | (codes[:, 2] << 4) | (codes[:, 3] << 6))
+    ctrl = ctrl_bytes.view(np.uint32).reshape(K, per // 16)
+    # data stream: raw LE value bytes, scattered like the varint encoder
+    ends = np.cumsum(lens)
+    starts = ends - lens
+    nbytes = int(ends[-1])
+    out = np.zeros(nbytes + (-nbytes) % 4, dtype=np.uint8)
+    du = d.astype(np.uint32)
+    for byte_i in range(4):
+        live = lens > byte_i
+        out[starts[live] + byte_i] = (
+            (du[live] >> np.uint32(8 * byte_i)) & np.uint32(0xFF))
+    data = out.view(np.uint32)
+    if data.size == 0:                                 # keep gathers in-bounds
+        data = np.zeros(1, np.uint32)
+    doffs = starts.reshape(K, per)[:, 0].astype(np.int32)
+    return SVBList(ctrl=ctrl, data=data, doffs=doffs, maxes=maxes,
+                   nbytes=nbytes, n=n, mode=mode, block_rows=block_rows)
+
+
+def decode_np(sl: SVBList) -> np.ndarray:
+    """Numpy reference decode, trimmed to the valid length."""
+    K, per = sl.num_blocks, sl.block_rows * LANES
+    i = np.arange(K * per)
+    ctrl = sl.ctrl.reshape(-1)
+    codes = (ctrl[i >> 4] >> (2 * (i & 15))) & 3
+    lens = codes.astype(np.int64) + 1
+    offs = np.cumsum(lens) - lens
+    data_bytes = sl.data.view(np.uint8)
+    d = np.zeros(K * per, dtype=np.uint32)
+    for byte_i in range(4):
+        live = lens > byte_i
+        idx = np.minimum(offs[live] + byte_i, data_bytes.size - 1)
+        d[live] |= data_bytes[idx].astype(np.uint32) << np.uint32(8 * byte_i)
+    seeds = np.concatenate([[0], sl.maxes[:-1]]).astype(np.uint32)
+    vals = np.asarray(deltas_lib.prefix_sum(
+        d.reshape(K, sl.block_rows, LANES), seeds, sl.mode))
+    return vals.reshape(-1)[: sl.n].astype(np.int64)
+
+
+def decode(sl: SVBList):
+    """Batched device decode (pow2-bucketed, jnp) → padded flat values.
+
+    Dispatches to the kernels layer so codec decode and kernel decode share
+    one implementation; callers trim to ``sl.n``.
+    """
+    from repro.kernels import svb_decode
+    return svb_decode.decode_bucketed(sl)
+
+
+def bits_per_int(sl: SVBList) -> float:
+    """Storage cost: data bytes + control bytes + per-block metadata
+    (4B data offset + 4B block max)."""
+    ctrl_bytes = sl.num_blocks * sl.block_rows * LANES // 4
+    meta_bytes = sl.num_blocks * 8
+    return (sl.nbytes + ctrl_bytes + meta_bytes) * 8 / max(sl.n, 1)

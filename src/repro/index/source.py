@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitpack
+from repro.core import codecs as codec_lib
 from repro.core import intersect as its
 from repro.core import varint as varint_lib
 
@@ -210,6 +211,7 @@ def precompute_layouts(parts, stats: dict | None = None) -> int:
     for part in parts:
         for tid, tp in part.terms.items():
             if (tp.kind == "list" and bitpack.skip_capable(tp.payload)
+                    and getattr(tp, "skip_ok", True)
                     and int(tp.payload.widths.shape[0]) >= SKIP_MIN_BLOCKS):
                 src = PackedSource(tp.payload, tp.n,
                                    maxes_np=np.asarray(tp.payload.maxes),
@@ -225,18 +227,24 @@ def decoded_ints_of(payload) -> int:
         return payload.n
     if bitpack.skip_capable(payload):
         return int(payload.widths.shape[0]) * payload.block_rows * bitpack.LANES
-    return payload.n
+    return int(getattr(payload, "padded_n", payload.n))
 
 
 def decode_padded_np(codec, tp) -> tuple[np.ndarray, int]:
-    """Decode one term posting to (pow2-padded int32 numpy vals, count)."""
+    """Decode one term posting to (pow2-padded int32 numpy vals, count).
+
+    Dispatch is by payload type through the codec registry
+    (``codecs.codec_for``) so mixed-codec indexes — the autotuner's output —
+    decode without an index-level codec name; the passed ``codec`` is only
+    the fallback for payload types the registry does not know."""
     if isinstance(tp.payload, bitpack.PackedList):
         vals = np.asarray(bitpack.decode_bucketed(tp.payload))[: tp.n]
         vals = vals.astype(np.int32)
     elif isinstance(tp.payload, varint_lib.VarintList):
         vals = varint_lib.decode(tp.payload).astype(np.int32)   # tail codec
     else:
-        vals = np.asarray(codec.decode(tp.payload))[: tp.n].astype(np.int32)
+        c = codec_lib.codec_for(tp.payload) or codec
+        vals = np.asarray(c.decode(tp.payload))[: tp.n].astype(np.int32)
     size = its.pow2_bucket(tp.n)
     return its.pad_to(vals, size), tp.n
 
@@ -581,7 +589,6 @@ class ResidentPool:
         decode-policy lists go resident decoded; skip-capable long lists
         stay compressed (their memory story *is* the skip index) and only
         warm their self-padded layout projection."""
-        from repro.core import codecs as codec_lib
         codec = codec_lib.get_codec(index.codec_name)
         for part in index.parts:
             for tid, tp in part.terms.items():
@@ -590,6 +597,7 @@ class ResidentPool:
                                       np.asarray(tp.payload))
                 elif tp.kind == "list":
                     if (bitpack.skip_capable(tp.payload) and
+                            getattr(tp, "skip_ok", True) and
                             int(tp.payload.widths.shape[0])
                             >= SKIP_MIN_BLOCKS):
                         continue                 # serves packed: stay compressed
@@ -629,6 +637,7 @@ def resolve(part, tid: int, tp, codec, cache=None, r_count: int | None = None,
     key = (part.uid, tid)
     want_skip = (skip and r_count is not None
                  and bitpack.skip_capable(tp.payload)
+                 and getattr(tp, "skip_ok", True)
                  and tp.n / max(r_count, 1) > SKIP_MIN_RATIO
                  and int(tp.payload.widths.shape[0]) >= SKIP_MIN_BLOCKS)
     if want_skip:

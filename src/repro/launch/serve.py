@@ -77,6 +77,28 @@ def coerce_index_flags(args) -> list[str]:
     return warnings
 
 
+# --codec flag value -> builder codec name ("auto" goes to the storage
+# autotuner; everything else pins one family index-wide)
+_CODEC_NAMES = {"auto": "auto", "bitpack": "bp-d1",
+                "streamvbyte": "streamvbyte-d1", "composite": "composite-d1",
+                "fastpfor": "fastpfor-d1", "varint": "varint"}
+
+
+def _codec_name(args) -> str:
+    return _CODEC_NAMES[getattr(args, "codec", "fastpfor")]
+
+
+def _print_codec_stats(args, idx) -> None:
+    """Storage report next to the build: bytes/int plus how many lists
+    landed in each codec family (the autotuner's visible output)."""
+    st = idx.stats()
+    counts = " ".join(f"{k}:{v}" for k, v in
+                      sorted(st["codec_counts"].items()))
+    print(f"[serve] index codec {getattr(args, 'codec', 'fastpfor')}: "
+          f"{st['bytes_per_int']:.2f} bytes/int "
+          f"({st['bits_per_int']:.2f} bits/int) [{counts}]")
+
+
 def serve_index(args):
     from repro.index import builder, corpus as corpus_lib, engine, source
     for w in coerce_index_flags(args):
@@ -92,7 +114,8 @@ def serve_index(args):
     if args.shards:
         return serve_index_sharded(args, corpus)
     idx = builder.build(corpus.postings, corpus.n_docs,
-                        codec_name="fastpfor-d1", B=16, n_parts=2)
+                        codec_name=_codec_name(args), B=16, n_parts=2)
+    _print_codec_stats(args, idx)
     queries = corpus.queries
     cache = engine.DecodeCache() if args.cache else None
     pool = None
@@ -235,8 +258,9 @@ def serve_index_sharded(args, corpus):
     t0 = time.perf_counter()
     sharded = builder.build_sharded(
         corpus.postings, corpus.n_docs, n_shards=args.shards,
-        codec_name="fastpfor-d1", B=16,
+        codec_name=_codec_name(args), B=16,
         n_parts=max(args.shards, 2))
+    _print_codec_stats(args, sharded.index)
     st = sharded.stats()
     print(f"[serve] sharded index: {st['n_shards']} shards on "
           f"{st['n_devices']} devices, warmed in "
@@ -379,6 +403,13 @@ def main():
                     help="paper-index: AOT signature warmup — precompile "
                          "the fused family ladder before the timed run so "
                          "steady-state serving never compiles")
+    ap.add_argument("--codec",
+                    choices=["auto", "bitpack", "streamvbyte", "composite",
+                             "fastpfor", "varint"],
+                    default="fastpfor",
+                    help="paper-index: posting-list codec family (auto = "
+                         "the cost-model storage autotuner picks codec + "
+                         "skip policy per list; DESIGN.md §2.13)")
     ap.add_argument("--cache", action="store_true",
                     help="paper-index: serve with a DecodeCache and report "
                          "its hit rate")

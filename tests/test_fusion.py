@@ -182,6 +182,52 @@ def test_fused_mixed_words_and_missing_bitmaps(uniform):
         batch_lib.execute_batch(idx, queries, pool=pool, fuse=True), seq)
 
 
+def test_fused_composite_zero_length_tail():
+    """Composite lists at exact block multiples carry a zero-length varint
+    tail; the decoded serving path and the fused family ceilings must both
+    stay inert to the empty-tail container (ISSUE 8 bugfix guard)."""
+    from repro.core import composite
+    per = composite.DEFAULT_ROWS * 128
+    n_docs = 1 << 14
+    rng = np.random.default_rng(13)
+    postings = [np.sort(rng.choice(n_docs, per, replace=False)),       # tail 0
+                np.sort(rng.choice(n_docs, per + 3, replace=False)),   # tail 3
+                np.sort(rng.choice(n_docs, 200, replace=False))]       # no head
+    idx = builder.build(postings, n_docs, codec_name="composite-d1", B=0,
+                        n_parts=1, varint_tail_below=0)
+    payloads = [tp.payload for tp in idx.parts[0].terms.values()]
+    assert payloads[0].tail.n == 0 and payloads[1].tail.n == 3
+    assert payloads[2].head is None
+    queries = [[0, 1], [0, 2], [1, 2], [0, 1, 2]]
+    seq = [engine.query(idx, q) for q in queries]
+    for fuse in (False, True):
+        _assert_identical(
+            batch_lib.execute_batch(idx, queries, fuse=fuse), seq)
+
+
+def test_fused_mixed_codec_families_one_batch():
+    """An autotuned index mixes varint/composite/bitpack payloads in one
+    batch; sentinel padding from the decoded sources must stay inert
+    through the fused family ceilings on both backends — 2^32-range values
+    sit right under the int32 sentinel, the regime where a padding bug
+    would surface as phantom hits."""
+    n_docs = 1 << 14
+    rng = np.random.default_rng(17)
+    postings = [np.sort(rng.choice(n_docs, n, replace=False))
+                for n in (60, 300, 1100, 5000, 9000)]
+    idx = builder.build(postings, n_docs, codec_name="auto", B=0, n_parts=1)
+    fams = {type(tp.payload).__name__ for p in idx.parts
+            for tp in p.terms.values() if tp.kind == "list"}
+    assert len(fams) >= 2                       # genuinely mixed families
+    queries = [[0, 4], [1, 3], [2, 4], [0, 1, 2], [3, 4], [0, 1, 2, 3, 4]]
+    seq = [engine.query(idx, q) for q in queries]
+    for backend in ("jax", "pallas"):
+        for fuse in (False, True):
+            _assert_identical(
+                batch_lib.execute_batch(idx, queries, backend=backend,
+                                        fuse=fuse), seq)
+
+
 # --------------------------------------------------------------------------
 # the dispatch collapse + plan stickiness
 # --------------------------------------------------------------------------
