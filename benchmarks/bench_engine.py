@@ -72,6 +72,13 @@ gates ``latency/p99_ms`` (Poisson at half capacity — a same-run-derived
 load, so the gate tracks the engine's latency behavior, not the absolute
 speed of the runner).
 
+A seventh section (``mutation/``, ISSUE 9) serves the segmented mutable
+index (DESIGN.md §2.14) after a burst of adds/seals/deletes: steady-state
+q/s vs q/s *during a background merge* (``mutation/merge_ratio`` — the
+serving cost of compaction), both gated byte-identical against a
+rebuild-from-scratch build, with ``mutation/steady_compiles`` asserting
+the post-swap generation compiles nothing.
+
 Derived column reports queries/sec (and decoded ints/query where that is
 the figure of merit).  CLI: ``--smoke`` runs the reduced sweep standalone
 (CI smoke gate), ``--json PATH`` additionally records a machine-readable
@@ -542,6 +549,90 @@ def _latency(quick: bool) -> None:
     RESULTS["latency/p99_ms"] = RESULTS["latency/poisson50_p99_ms"]
 
 
+def _mutation(quick: bool) -> None:
+    """Live-mutation serving (ISSUE 9): the segmented mutable index
+    (DESIGN.md §2.14) after a burst of adds/seals/deletes, measured in a
+    steady state ("frozen" — no merge running) and then *during* a
+    background merge, same serving path and batch size — the ratio is the
+    serving cost of compaction, which the generation design keeps near
+    1.0 (merges stage off-lock and swap one reference).  Both windows are
+    gated byte-identical against a rebuild-from-scratch index, and the
+    post-swap batches must compile nothing (the candidate generation
+    pre-warms through the shared sticky plan)."""
+    import numpy as np
+    from repro.index import builder, corpus as corpus_lib, engine, segments
+    from repro.index import batch as batch_lib
+
+    table = {k: corpus_lib.TABLE2_CLUEWEB[k] for k in (2, 3, 4, 5)}
+    n_docs = 1 << 14 if quick else 1 << 16
+    n_queries = 32 if quick else 128
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=11, table=table)
+    mi = segments.MutableIndex.from_postings(
+        corpus.postings, corpus.n_docs, codec_name="fastpfor-d1", B=16,
+        n_parts=2)
+    queries = corpus.queries
+    rng = np.random.default_rng(5)
+    term_pool = sorted({t for q in queries for t in q})
+    n_mut = 200 if quick else 1000
+    for i in range(n_mut):
+        k = int(rng.integers(1, 4))
+        mi.add(sorted(rng.choice(term_pool, size=k,
+                                 replace=False).tolist()))
+        if i == n_mut // 2:
+            mi.seal()
+    for d in rng.choice(mi.next_doc_id, size=n_mut // 10, replace=False):
+        mi.delete(int(d))
+
+    def run_once(stats=None):
+        out = []
+        for lo in range(0, len(queries), 32):
+            out.extend(mi.execute_batch(queries[lo: lo + 32],
+                                        stats=stats))
+        return out
+
+    def assert_identical(out):
+        idx = builder.build(mi.live_postings(), max(mi.next_doc_id, 1),
+                            codec_name="fastpfor-d1", B=16, n_parts=2)
+        for q, a in zip(queries, out):
+            b = engine.query(idx, q)
+            assert a.count == b.count and np.array_equal(a.docs, b.docs)
+
+    batch_lib.warm_to_fixed_point(lambda s: run_once(stats=s))
+    assert_identical(run_once())
+    qps_frozen = _qps(run_once, len(queries))
+    emit("engine/mutation/frozen", 1.0 / qps_frozen,
+         f"{qps_frozen:.1f} q/s ({mi.counters()['n_segments']} segments, "
+         f"{mi.counters()['tombstones']} tombstones)")
+    RESULTS["mutation/frozen_qps"] = round(qps_frozen, 1)
+
+    # the timed window runs WHILE the background merge decodes, rebuilds
+    # and stages the candidate generation
+    merge_thread = mi.merge_async(warm_queries=queries)
+    loops, t0 = 0, time.perf_counter()
+    while loops == 0 or (merge_thread.is_alive() and loops < 64):
+        out = run_once()
+        loops += 1
+    dt = time.perf_counter() - t0
+    merge_thread.join()
+    assert mi.counters()["n_merges"] == 1
+    qps_merge = loops * len(queries) / dt
+    ratio = qps_merge / max(qps_frozen, 1e-9)
+    emit("engine/mutation/during_merge", 1.0 / qps_merge,
+         f"{qps_merge:.1f} q/s {ratio:.2f}x of frozen over {loops} loops")
+    RESULTS["mutation/during_merge_qps"] = round(qps_merge, 1)
+    RESULTS["mutation/merge_ratio"] = round(ratio, 2)
+    RESULTS["mutation/merge_loops"] = loops
+
+    # post-swap: byte-identical to a fresh rebuild, zero compiles
+    stats: dict = {}
+    assert_identical(run_once(stats=stats))
+    RESULTS["mutation/steady_compiles"] = stats.get("n_compiles", 0)
+    emit("engine/mutation/post_merge", 0.0,
+         f"generation {mi.generation}, "
+         f"{RESULTS['mutation/steady_compiles']} post-swap compiles")
+
+
 def _compression(quick: bool) -> None:
     """Storage autotuner A/B (ISSUE 8): the ``codec_name="auto"`` build vs
     the all-bitpack reference (``bp-d1`` with the varint tail rule off) on
@@ -626,6 +717,7 @@ def run(quick: bool = False) -> None:
     _compression(quick)
     _sharded(quick)
     _latency(quick)
+    _mutation(quick)
 
 
 def _mode_mismatch(key: str, bres: dict) -> bool:

@@ -1,0 +1,634 @@
+"""Mutable segmented index: adds, deletes, background merge (DESIGN.md §2.14).
+
+The engine below this layer is frozen at build time — every structure the
+batched/fused/sharded serving stack touches (``IndexPart`` payloads, packed
+layouts, ``ResidentPool`` entries, group signatures) assumes an immutable
+posting store.  No real service runs on a read-only corpus, so this module
+adds a tantivy-style segment lifecycle *on top of* that frozen machinery
+instead of mutating it:
+
+  mutable segment   new documents accumulate in a small append-only segment
+                    (per-term python lists of ascending local doc ids) and
+                    are served via the decoded path: a host-side sorted
+                    intersection merged into results at collect time.  No
+                    device program ever sees the mutable segment, so adds
+                    can never change a group/fusion signature.
+  sealed segments   ``seal()`` freezes the mutable segment into a normal
+                    ``builder.build`` index (bitpacked + skip-indexed, same
+                    codecs/autotuner as any build) covering a contiguous
+                    global doc-id range.  A generation's serving view is the
+                    concatenation of its sealed segments' parts, doc-range
+                    shifted — ``batch.schedule`` / ``engine.query`` / the
+                    sharded fan-out run on it unchanged.
+  tombstones        deletes set one bit in a global doc-id-indexed bitmap
+                    and are filtered at collect (``finalize``), after the
+                    device programs ran: results stay byte-identical to a
+                    rebuild-from-scratch (the filtered set is exactly the
+                    rebuilt set, and both sides stay doc-id sorted), while
+                    the launched programs — and therefore their signatures
+                    — never see a delete at all.
+  generations       the serving state is one atomically-swapped reference
+                    ``_state = (Generation, MutableSegment)``.  Each
+                    ``Generation`` owns its composed view plus its own
+                    generation-tagged ``ResidentPool`` (or per-shard pools
+                    via ``ShardedIndex``); queries grab the reference once
+                    per batch and keep serving the old generation while a
+                    new one is staged off to the side.  ``carry_from``
+                    moves surviving segments' device buffers into the new
+                    pool without re-decode or re-transfer, and part ``uid``s
+                    are preserved across generations so the global layout
+                    memo keeps hitting.
+  background merge  ``merge()`` decodes the snapshot segments' live
+                    postings (tombstoned docs drop out here — this is when
+                    deletes are physically reclaimed), rebuilds them as one
+                    segment, stages + optionally plan-warms the candidate
+                    generation entirely off-lock, then swaps under the
+                    mutation lock.  Serving never pauses: queries are
+                    lock-free, and the only locked step is the reference
+                    swap.  A ``hook(stage)`` seam is called at every merge
+                    phase boundary so fault-injection tests can crash the
+                    merge mid-flight and assert the old generation is still
+                    serving, byte-identical.
+
+Doc ids are append-only and never recycled: segments partition
+``[0, next_doc_id)`` in base order and the mutable segment is always the
+highest range, so per-part results concatenated in part order (what
+``collect_batch`` already does) followed by the mutable hits are globally
+sorted — the byte-identity invariant needs no re-sort anywhere.
+
+Why signatures stay stable across a generation swap: ``GroupKey`` describes
+operand *shapes* only (M/N/W buckets, algo, packed geometry), never pool or
+part identity.  A swap changes which pool serves the gathers and which part
+uids key the layout memo, but a warmed sticky ``FusionPlan`` covers the new
+generation's groups whenever their family dims fit the existing monotone
+ceilings — so steady-state serving stays at 0 compiles through seals and
+merges that don't grow any family past its ceiling (and a merge can pre-warm
+the candidate generation through the same plan before publishing it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import codecs as codec_lib
+from repro.index import batch as batch_lib
+from repro.index import builder
+from repro.index import source
+from repro.index.builder import HybridIndex, IndexPart, TermPosting
+from repro.index.engine import QueryResult
+
+
+_EMPTY = TermPosting("empty", None, 0)
+
+
+class TermMap(dict):
+    """Per-part term dict that answers *any* term id.
+
+    The vocabulary grows as documents are added, but a sealed segment was
+    built against the vocabulary of its own era — a query touching a newer
+    term must see an empty posting in the old segment, not a KeyError.
+    """
+
+    def __missing__(self, tid):
+        return _EMPTY
+
+
+def _wrap_terms(index: HybridIndex) -> HybridIndex:
+    for part in index.parts:
+        if not isinstance(part.terms, TermMap):
+            part.terms = TermMap(part.terms)
+    return index
+
+
+# --------------------------------------------------------------------------
+# segments
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Segment:
+    """One sealed, immutable doc-id range ``[doc_base, doc_hi)`` backed by a
+    normal ``builder.build`` index over its local id space."""
+    doc_base: int
+    doc_hi: int
+    index: HybridIndex
+
+    @property
+    def span(self) -> int:
+        return self.doc_hi - self.doc_base
+
+
+class MutableSegment:
+    """The append-only write buffer: per-term ascending local doc ids.
+
+    Appends publish ``n_docs`` *last*, so any reader that slices postings
+    by a ``cutoff`` it read from ``n_docs`` sees only complete documents —
+    that is the whole consistency protocol of the decoded serving path.
+    """
+
+    def __init__(self, doc_base: int):
+        self.doc_base = doc_base
+        self.postings: dict[int, list[int]] = {}
+        self.n_docs = 0
+
+    def add(self, terms) -> int:
+        lid = self.n_docs
+        for t in terms:
+            self.postings.setdefault(int(t), []).append(lid)
+        self.n_docs = lid + 1          # publish after postings are complete
+        return self.doc_base + lid
+
+    def intersect(self, term_ids, cutoff: int) -> np.ndarray:
+        """Sorted global doc ids matching the conjunction, restricted to
+        the first ``cutoff`` docs (a snapshot's consistent prefix)."""
+        empty = np.zeros(0, np.int64)
+        if cutoff <= 0 or not term_ids:
+            return empty
+        arrs = []
+        for t in term_ids:
+            lst = self.postings.get(int(t))
+            if not lst:
+                return empty
+            a = np.asarray(lst, dtype=np.int64)
+            a = a[: int(np.searchsorted(a, cutoff))]    # ids are ascending
+            if a.size == 0:
+                return empty
+            arrs.append(a)
+        arrs.sort(key=len)
+        r = arrs[0]
+        for a in arrs[1:]:
+            r = np.intersect1d(r, a, assume_unique=True)
+            if r.size == 0:
+                break
+        return r + self.doc_base
+
+
+@dataclasses.dataclass
+class Generation:
+    """One immutable serving epoch: the composed view over sealed segments
+    plus the generation-tagged residency that serves it (a ``ResidentPool``
+    single-device, a ``ShardedIndex`` with per-shard pools under fan-out)."""
+    gid: int
+    segments: list[Segment]
+    view: HybridIndex
+    pool: "source.ResidentPool | None"
+    sharded: object = None          # shard.ShardedIndex | None
+
+    def residency_stats(self) -> dict:
+        if self.sharded is not None:
+            return self.sharded.stats()
+        return self.pool.stats() if self.pool is not None else {}
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """What one batch serves against: a generation reference plus a
+    consistent prefix of the mutable segment.  Grabbing it is lock-free
+    (one tuple read), and everything it points at is append-only or
+    immutable, so a background swap can never corrupt an in-flight batch."""
+    gen: Generation
+    mseg: MutableSegment
+    cutoff: int
+
+
+class MergeAborted(RuntimeError):
+    """A merge hook interrupted the merge; nothing was published."""
+
+
+# --------------------------------------------------------------------------
+# the mutable index
+# --------------------------------------------------------------------------
+
+class MutableIndex:
+    """Segmented mutable index serving through the frozen batched engine.
+
+    ``add``/``delete``/``seal``/``merge`` mutate under one re-entrant lock;
+    queries never take it — they snapshot ``_state`` (one atomic tuple
+    read) and run entirely against immutable or append-only structures.
+
+    n_parts:  doc-range parts per sealed/merged segment (the L3/shard
+              partitioning knob of ``builder.build``).
+    n_shards: 0 = single-device generations with one ``ResidentPool``
+              each; N = every generation is a ``ShardedIndex`` fan-out.
+    """
+
+    def __init__(self, *, codec_name: str = "bp-d1", B: int = 16,
+                 n_parts: int = 1, n_shards: int = 0,
+                 capacity_ints: int = 1 << 26,
+                 varint_tail_below: int = 1024,
+                 plan: "batch_lib.FusionPlan | None" = None):
+        self.codec_name = codec_name
+        self.B = B
+        self.n_parts = max(n_parts, 1)
+        self.n_shards = n_shards
+        self.capacity_ints = capacity_ints
+        self.varint_tail_below = varint_tail_below
+        self.plan = plan if plan is not None else batch_lib.FusionPlan()
+        self._lock = threading.RLock()
+        self._next_id = 0
+        self._vocab = 0
+        self._dead = np.zeros(1024, dtype=bool)
+        self._n_dead = 0
+        self._gen_counter = 0
+        self._merging = False
+        self.n_seals = 0
+        self.n_merges = 0
+        gen = self._new_generation([], carry=None)
+        self._state: tuple[Generation, MutableSegment] = \
+            (gen, MutableSegment(0))
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_postings(cls, postings: list[np.ndarray], n_docs: int,
+                      **kw) -> "MutableIndex":
+        """Bootstrap from a frozen corpus: one initial sealed segment over
+        ``[0, n_docs)`` built exactly as ``builder.build`` would."""
+        mi = cls(**kw)
+        with mi._lock:
+            mi._vocab = len(postings)
+            mi._next_id = n_docs
+            mi._ensure_dead(n_docs)
+            seg = mi._build_segment(0, n_docs, list(postings))
+            gen = mi._new_generation([seg], carry=mi._state[0])
+            mi._state = (gen, MutableSegment(n_docs))
+        return mi
+
+    # -- mutation ----------------------------------------------------------
+
+    def _ensure_dead(self, n: int):
+        if n > self._dead.shape[0]:
+            grown = np.zeros(max(2 * self._dead.shape[0], n + 1024),
+                             dtype=bool)
+            grown[: self._dead.shape[0]] = self._dead
+            self._dead = grown
+
+    def add(self, terms) -> int:
+        """Add one document; returns its (permanent) global doc id."""
+        terms = [int(t) for t in terms]
+        if not terms:
+            raise ValueError("a document needs at least one term")
+        with self._lock:
+            self._vocab = max(self._vocab, max(terms) + 1)
+            # grow the tombstone bitmap here (adds already hold the lock)
+            # so delete() can always set its bit in place — an in-place
+            # store is immediately visible to lock-free readers, a grown
+            # copy would not be
+            self._ensure_dead(self._next_id + 1)
+            gid = self._state[1].add(terms)
+            self._next_id = gid + 1
+            return gid
+
+    def delete(self, doc_id: int) -> bool:
+        """Tombstone one document (idempotent).  Takes effect immediately:
+        collect-time filtering reads the shared bitmap, no rebuild, no
+        generation swap, no signature change."""
+        with self._lock:
+            if not (0 <= doc_id < self._next_id):
+                raise KeyError(f"doc id {doc_id} was never assigned")
+            if self._dead[doc_id]:
+                return False
+            self._dead[doc_id] = True
+            self._n_dead += 1
+            return True
+
+    def seal(self) -> "Segment | None":
+        """Freeze the mutable segment into a sealed one and publish a new
+        generation.  Concurrent queries keep serving the old state until
+        the single reference swap; concurrent adds briefly wait here."""
+        with self._lock:
+            gen, mseg = self._state
+            if mseg.n_docs == 0:
+                return None
+            postings = [
+                np.asarray(mseg.postings.get(t, []), dtype=np.int64)
+                for t in range(self._vocab)]
+            seg = self._build_segment(mseg.doc_base, mseg.n_docs, postings)
+            new_gen = self._new_generation(gen.segments + [seg], carry=gen)
+            self._state = (new_gen, MutableSegment(self._next_id))
+            self.n_seals += 1
+            return seg
+
+    # -- segment building / generations ------------------------------------
+
+    def _build_segment(self, base: int, span: int,
+                       postings: list[np.ndarray]) -> Segment:
+        idx = builder.build(postings, span, codec_name=self.codec_name,
+                            B=self.B, n_parts=min(self.n_parts, max(span, 1)),
+                            varint_tail_below=self.varint_tail_below)
+        return Segment(base, base + span, _wrap_terms(idx))
+
+    def _compose_view(self, segments: list[Segment]) -> HybridIndex:
+        """The serving view: every segment's parts doc-range-shifted into
+        global id space, in base order.  Part ``uid``s are preserved so
+        layout memos and carried pool entries keep their keys across
+        generations."""
+        parts = []
+        for seg in sorted(segments, key=lambda s: s.doc_base):
+            for p in seg.index.parts:
+                parts.append(IndexPart(doc_lo=seg.doc_base + p.doc_lo,
+                                       doc_hi=seg.doc_base + p.doc_hi,
+                                       terms=p.terms, uid=p.uid))
+        return HybridIndex(n_docs=max(self._next_id, 1), B=self.B,
+                           codec_name=self.codec_name, parts=parts)
+
+    def _new_generation(self, segments: list[Segment], *,
+                        carry: Generation | None,
+                        pool: "source.ResidentPool | None" = None
+                        ) -> Generation:
+        view = self._compose_view(segments)
+        with self._lock:
+            gid = self._gen_counter
+            self._gen_counter += 1
+        if self.n_shards:
+            from repro.index import shard as shard_lib
+            sharded = shard_lib.shard_index(
+                view, self.n_shards, capacity_ints=self.capacity_ints,
+                warm=True)
+            return Generation(gid, segments, view, None, sharded)
+        if pool is None:
+            pool = source.ResidentPool(capacity_ints=self.capacity_ints,
+                                       tag=gid)
+            if carry is not None and carry.pool is not None:
+                pool.carry_from(carry.pool)
+        pool.tag = gid
+        pool.warm(view)
+        return Generation(gid, segments, view, pool, None)
+
+    # -- background merge --------------------------------------------------
+
+    def merge(self, *, hook=None, warm_queries=None,
+              backend: str = "jax") -> bool:
+        """Compact all sealed segments of the current generation into one,
+        dropping tombstoned docs, and swap the new generation in.
+
+        Designed to run on a background thread: every heavy phase (decode,
+        build, pool staging, plan warm) happens before the lock is taken,
+        and the locked step is the reference swap.  ``hook(stage)`` is
+        called at each phase boundary (stages: ``snapshot``, ``decode``,
+        ``build``, ``stage``, ``warm``, ``swap``) — an exception raised
+        there aborts the merge with the old generation untouched, and a
+        retry converges because nothing was published.  ``warm_queries``
+        pre-warms the candidate generation's fused signatures through the
+        shared sticky plan so the swap does not invalidate warmed steady
+        state."""
+        with self._lock:
+            if self._merging:
+                return False
+            self._merging = True
+        try:
+            hook = hook or (lambda stage: None)
+            with self._lock:
+                gen, _ = self._state
+                segs = list(gen.segments)
+                vocab = self._vocab
+            lo = min((s.doc_base for s in segs), default=0)
+            hi = max((s.doc_hi for s in segs), default=0)
+            in_range = int(self._dead[lo:hi].sum()) if hi > lo else 0
+            if len(segs) < 2 and in_range == 0:
+                return False                   # nothing to compact
+            hook("snapshot")
+
+            postings = self._decode_live(segs, vocab, lo)
+            hook("decode")
+            merged = self._build_segment(lo, hi - lo, postings)
+            hook("build")
+
+            # stage the candidate generation completely off-lock: carried
+            # entries reuse the old generation's device buffers, merged
+            # lists pay their one decode+transfer here, not on the query
+            # path after the swap
+            cand_segs = sorted([merged] + [s for s in segs
+                                           if s.doc_hi > hi or s.doc_base < lo],
+                               key=lambda s: s.doc_base)
+            pool = None
+            if not self.n_shards:
+                pool = source.ResidentPool(capacity_ints=self.capacity_ints)
+                if gen.pool is not None:
+                    pool.carry_from(gen.pool)
+            cand = self._new_generation(cand_segs, carry=gen, pool=pool)
+            hook("stage")
+            if warm_queries:
+                self._warm_generation(cand, warm_queries, backend=backend)
+            hook("warm")
+
+            hook("swap")
+            with self._lock:
+                cur, mseg = self._state
+                snap_set = set(map(id, segs))
+                late = [s for s in cur.segments if id(s) not in snap_set]
+                if late:
+                    # a seal published between snapshot and swap: rebuild
+                    # the generation with the late segments included
+                    # (carried from the candidate, so only the late ones
+                    # pay staging inside the lock — they are small)
+                    cand = self._new_generation(
+                        sorted(cand_segs + late, key=lambda s: s.doc_base),
+                        carry=cand, pool=cand.pool)
+                self._state = (cand, mseg)
+                self.n_merges += 1
+            return True
+        finally:
+            with self._lock:
+                self._merging = False
+
+    def merge_async(self, **kw) -> threading.Thread:
+        """Run ``merge`` on a daemon thread (serving continues lock-free
+        while it compacts); join the returned thread to wait for it."""
+        t = threading.Thread(target=self.merge, kwargs=kw, daemon=True)
+        t.start()
+        return t
+
+    def _decode_live(self, segs: list[Segment], vocab: int,
+                     base: int) -> list[np.ndarray]:
+        """Decode every segment's postings back to global doc ids (this is
+        the only place sealed payloads are ever decompressed outside
+        serving), drop tombstoned docs, and re-base to the merged span.
+        Segments and parts iterate in doc order, so concatenation keeps
+        every list sorted."""
+        acc: list[list[np.ndarray]] = [[] for _ in range(vocab)]
+        dead = self._dead
+        for seg in sorted(segs, key=lambda s: s.doc_base):
+            codec = codec_lib.get_codec(seg.index.codec_name)
+            for part in seg.index.parts:
+                off = seg.doc_base + part.doc_lo
+                for tid, tp in part.terms.items():
+                    if tp.kind == "empty" or tid >= vocab:
+                        continue
+                    if tp.kind == "bitmap":
+                        loc = bm.extract_np(np.asarray(tp.payload))
+                    else:
+                        vals, n = source.decode_padded_np(codec, tp)
+                        loc = vals[:n]
+                    g = loc.astype(np.int64) + off
+                    g = g[~dead[g]]
+                    if g.size:
+                        acc[tid].append(g - base)
+        return [np.concatenate(a) if a else np.zeros(0, np.int64)
+                for a in acc]
+
+    def _warm_generation(self, gen: Generation, queries, *,
+                         backend: str = "jax"):
+        """Drive the candidate generation through the shared sticky plan to
+        the signature fixed point before it is published.  Walks the same
+        ×1.5 batch-row ladder ``warm_server`` uses: live flushes are
+        variable sized, and every row bucket against the *merged* geometry
+        is a distinct program — a single full-batch pass would leave the
+        small buckets cold and the first post-swap deadline flush would
+        compile."""
+        snap = Snapshot(gen, MutableSegment(self._next_id), 0)
+        sizes, b = [], 1
+        while b < len(queries):
+            sizes.append(b)
+            b = b * 3 // 2 if b >= 2 else b + 1
+        sizes.append(len(queries))
+
+        def one_pass(stats):
+            for size in sizes:
+                for lo in range(0, len(queries), size):
+                    chunk = queries[lo: lo + size]
+                    groups = self.schedule(snap, chunk, stats=stats)
+                    groups = batch_lib.fuse_groups(groups, plan=self.plan,
+                                                   stats=stats)
+                    batch_lib.collect_batch(self.launch(
+                        snap, groups, len(chunk), backend=backend,
+                        stats=stats))
+
+        batch_lib.warm_to_fixed_point(one_pass)
+
+    # -- serving -----------------------------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        gen, mseg = self._state
+        return Snapshot(gen, mseg, mseg.n_docs)
+
+    def schedule(self, snap: Snapshot, queries, *, stats=None, cache=None):
+        """``batch.schedule`` over the snapshot generation (raw groups —
+        the caller applies fusion so admission accounting like the
+        server's ``plan_covers`` check stays possible)."""
+        gen = snap.gen
+        pool = (gen.sharded.pool_map if gen.sharded is not None
+                else gen.pool)
+        return batch_lib.schedule(gen.view, queries, cache=cache,
+                                  stats=stats, pool=pool)
+
+    def launch(self, snap: Snapshot, groups, n_queries: int, *,
+               backend: str = "jax", max_results: int = 1 << 16,
+               max_group_size: int = batch_lib.MAX_GROUP_SIZE,
+               stats=None) -> "batch_lib.PendingBatch":
+        gen = snap.gen
+        if gen.sharded is not None:
+            from repro.index import shard as shard_lib
+            return shard_lib.launch_groups_sharded(
+                gen.sharded, groups, n_queries=n_queries, backend=backend,
+                max_results=max_results, max_group_size=max_group_size,
+                stats=stats)
+        return batch_lib.launch_groups(
+            groups, n_queries=n_queries, backend=backend,
+            max_results=max_results, max_group_size=max_group_size,
+            pool=gen.pool, stats=stats)
+
+    def finalize(self, snap: Snapshot, queries, results,
+                 max_results: int = 1 << 16) -> list[QueryResult]:
+        """Collect-time completion: filter tombstones out of the sealed
+        hits, append the mutable segment's decoded-path hits (its doc ids
+        are the highest range, so plain concatenation stays sorted), and
+        recount."""
+        dead = self._dead
+        out = []
+        for q, r in zip(queries, results):
+            docs = r.docs
+            if docs.size:
+                docs = docs[~dead[docs]]
+            mdocs = snap.mseg.intersect(q, snap.cutoff)
+            if mdocs.size:
+                mdocs = mdocs[~dead[mdocs]]
+                docs = np.concatenate([docs, mdocs]) if docs.size else mdocs
+            out.append(QueryResult(count=int(docs.size),
+                                   docs=docs[:max_results]))
+        return out
+
+    def execute_batch(self, queries, *, backend: str = "jax",
+                      fuse: bool = True, stats=None, cache=None,
+                      max_results: int = 1 << 16) -> list[QueryResult]:
+        """One-call serving path, byte-identical to rebuilding the live
+        corpus from scratch and running ``batch.execute_batch`` on it."""
+        snap = self.snapshot()
+        groups = self.schedule(snap, queries, stats=stats, cache=cache)
+        if fuse:
+            groups = batch_lib.fuse_groups(groups, plan=self.plan,
+                                           stats=stats)
+        pending = self.launch(snap, groups, len(queries), backend=backend,
+                              stats=stats)
+        results = batch_lib.collect_batch(pending)
+        return self.finalize(snap, queries, results, max_results)
+
+    def warm(self, queries, *, backend: str = "jax", fuse: bool = True
+             ) -> dict:
+        """Warm the current generation's signatures (and pools) to the
+        fixed point through the same path serving uses."""
+        import time
+        t0 = time.perf_counter()
+        c0 = batch_lib._compile_count()
+        n_sigs, passes, converged = batch_lib.warm_to_fixed_point(
+            lambda s: self.execute_batch(queries, backend=backend,
+                                         fuse=fuse, stats=s))
+        return {"n_compiles": batch_lib._compile_count() - c0,
+                "n_signatures": n_sigs, "passes": passes,
+                "converged": converged,
+                "time_s": time.perf_counter() - t0}
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def next_doc_id(self) -> int:
+        return self._next_id
+
+    @property
+    def generation(self) -> int:
+        return self._state[0].gid
+
+    def live_postings(self) -> list[np.ndarray]:
+        """The rebuild-from-scratch oracle's input: per-term sorted global
+        doc ids of every live (non-tombstoned) document.  Decodes sealed
+        payloads — test/diagnostic use, not a serving path."""
+        with self._lock:
+            gen, mseg = self._state
+            vocab = self._vocab
+            cutoff = mseg.n_docs
+        sealed = self._decode_live(gen.segments, vocab, 0)
+        dead = self._dead
+        out = []
+        for t in range(vocab):
+            parts = [sealed[t]] if sealed[t].size else []
+            lst = mseg.postings.get(t)
+            if lst:
+                a = np.asarray(lst, dtype=np.int64)
+                a = a[: int(np.searchsorted(a, cutoff))] + mseg.doc_base
+                a = a[~dead[a]]
+                if a.size:
+                    parts.append(a)
+            out.append(np.concatenate(parts) if parts
+                       else np.zeros(0, np.int64))
+        return out
+
+    def counters(self) -> dict:
+        """The build-banner counters: segment/tombstone/generation state."""
+        gen, mseg = self._state
+        return {"generation": gen.gid,
+                "n_segments": len(gen.segments),
+                "mutable_docs": mseg.n_docs,
+                "tombstones": self._n_dead,
+                "next_doc_id": self._next_id,
+                "vocab": self._vocab,
+                "n_seals": self.n_seals,
+                "n_merges": self.n_merges}
+
+    def stats(self) -> dict:
+        gen, _ = self._state
+        return {**self.counters(),
+                "residency": gen.residency_stats(),
+                "index": gen.view.stats() if gen.view.parts else {}}

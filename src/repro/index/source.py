@@ -381,9 +381,10 @@ class ResidentPool:
     (single-device serving, unchanged).
     """
 
-    def __init__(self, capacity_ints: int = 1 << 26, device=None):
+    def __init__(self, capacity_ints: int = 1 << 26, device=None, tag=None):
         self.capacity = capacity_ints
         self.device = device
+        self.tag = tag                 # generation tag (DESIGN.md §2.14)
         self._store: OrderedDict = OrderedDict()
         self._pad_rows: dict[tuple, jnp.ndarray] = {}
         self._arenas: dict[tuple, RowArena] = {}
@@ -444,12 +445,18 @@ class ResidentPool:
         self._evict()
         return entry
 
-    def stage_bitmap(self, key, words_np: np.ndarray) -> jnp.ndarray:
+    def stage_bitmap(self, key, words_np: np.ndarray,
+                     dev: jnp.ndarray | None = None) -> jnp.ndarray:
         """Stage one bitmap term's word row (key should carry a 'bm' tag to
-        keep it disjoint from decoded-list keys)."""
+        keep it disjoint from decoded-list keys).  ``dev`` reuses an
+        already-staged device buffer (same contract as ``stage``)."""
         entry = self._store.get(key)
         if entry is None:
-            entry = {"dev": jax.device_put(words_np, self.device),
+            if dev is None:
+                dev = jax.device_put(words_np, self.device)
+            elif self.device is not None and self.device not in dev.devices():
+                dev = jax.device_put(dev, self.device)
+            entry = {"dev": dev,
                      "np": words_np,
                      "n": int(words_np.shape[0]), "pads": {},
                      "ints": int(words_np.shape[0]), "pad_ints": 0}
@@ -584,11 +591,38 @@ class ResidentPool:
 
     # -- lifecycle ---------------------------------------------------------
 
+    def carry_from(self, other: "ResidentPool",
+                   part_uids: set | None = None) -> int:
+        """Generation-swap residency reuse (DESIGN.md §2.14): adopt another
+        pool's staged entries — decoded rows and bitmap rows — around
+        their existing device buffers, so surviving segments pay neither a
+        re-decode nor a second H2D transfer when a new generation's pool
+        is built next to the old one.  ``part_uids`` restricts the carry
+        to entries whose part survived the swap (None = carry all).
+        Returns the number of entries carried; LRU accounting counts them
+        as freshly staged in this pool."""
+        carried = 0
+        for key, e in list(other._store.items()):
+            if part_uids is not None:
+                uid = key[1] if (key and key[0] == "bm") else key[0]
+                if uid not in part_uids:
+                    continue
+            if key in self._store:
+                continue
+            if key and key[0] == "bm":
+                self.stage_bitmap(key, e["np"], dev=e["dev"])
+            else:
+                self.stage(key, e["np"], e["n"], dev=e["dev"])
+            carried += 1
+        return carried
+
     def warm(self, index, stats: dict | None = None) -> dict:
         """Stage the whole index per the resolve policy: bitmaps and
         decode-policy lists go resident decoded; skip-capable long lists
         stay compressed (their memory story *is* the skip index) and only
-        warm their self-padded layout projection."""
+        warm their self-padded layout projection.  Already-resident
+        entries (e.g. carried across a generation swap) skip the decode
+        entirely."""
         codec = codec_lib.get_codec(index.codec_name)
         for part in index.parts:
             for tid, tp in part.terms.items():
@@ -596,6 +630,9 @@ class ResidentPool:
                     self.stage_bitmap(("bm", part.uid, tid),
                                       np.asarray(tp.payload))
                 elif tp.kind == "list":
+                    if (part.uid, tid) in self._store:
+                        self._store.move_to_end((part.uid, tid))
+                        continue
                     if (bitpack.skip_capable(tp.payload) and
                             getattr(tp, "skip_ok", True) and
                             int(tp.payload.widths.shape[0])
@@ -609,7 +646,8 @@ class ResidentPool:
         return self.stats()
 
     def stats(self) -> dict:
-        return {"resident_lists": len(self._store),
+        return {"tag": self.tag,
+                "resident_lists": len(self._store),
                 "resident_ints": self.resident_ints,
                 "staged_lists": self.staged_lists,
                 "staged_ints": self.staged_ints,

@@ -45,6 +45,28 @@ def coerce_index_flags(args) -> list[str]:
     they got.  Every implied rewrite is now explicit; ``args`` is mutated
     in place so the serving paths read the *effective* values."""
     warnings = []
+    if getattr(args, "mutate", 0):
+        if args.batch <= 1:
+            warnings.append(f"--mutate implies batched mode: "
+                            f"--batch {args.batch} -> 32")
+            args.batch = 32
+        if args.pipeline:
+            warnings.append("--pipeline ignored with --mutate (the mutable "
+                            "path batches against generation snapshots)")
+            args.pipeline = 0
+        if args.cache:
+            warnings.append("--cache ignored with --mutate (decoded "
+                            "results change as the corpus mutates)")
+            args.cache = False
+        if not args.resident:
+            warnings.append("--mutate implies the device-resident index: "
+                            "--resident on (each generation owns a warmed "
+                            "ResidentPool)")
+            args.resident = True
+        return warnings
+    if getattr(args, "delete_frac", None) is not None:
+        warnings.append("--delete-frac ignored without --mutate")
+        args.delete_frac = None
     if args.shards:
         if args.batch <= 1:
             warnings.append(f"--shards implies batched mode: "
@@ -111,6 +133,8 @@ def serve_index(args):
                  "see DESIGN.md §2.12)" if kmode == "interpret" else ""))
     corpus = corpus_lib.synthesize(n_docs=1 << 16, n_queries=args.queries,
                                    seed=5, shared_vocab=args.shared_vocab)
+    if getattr(args, "mutate", 0):
+        return serve_index_mutable(args, corpus)
     if args.shards:
         return serve_index_sharded(args, corpus)
     idx = builder.build(corpus.postings, corpus.n_docs,
@@ -243,6 +267,107 @@ def serve_index(args):
           f"decoded ints/query ({stats.get('skip_folds', 0)} skip folds), "
           f"{idx.stats()['bits_per_int']:.2f} bits/int"
           f"{cache_note()}")
+
+
+def serve_index_mutable(args, corpus):
+    """--mutate N: live-corpus serving demo over the segmented mutable
+    index (DESIGN.md §2.14).
+
+    Bootstraps a MutableIndex from the synthetic corpus, applies N adds
+    (with a mid-stream seal) and ``--delete-frac``·N tombstones, warms to
+    the signature fixed point, then runs the timed loop *while a
+    background merge compacts the sealed segments* — the printed q/s is
+    throughput during the merge, and the run ends with a differential
+    check against a rebuild-from-scratch index."""
+    from repro.index import batch as batch_lib, builder, engine, segments
+    n_mut = args.mutate
+    del_frac = 0.1 if args.delete_frac is None else args.delete_frac
+    t0 = time.perf_counter()
+    mi = segments.MutableIndex.from_postings(
+        corpus.postings, corpus.n_docs, codec_name=_codec_name(args),
+        B=16, n_parts=2, n_shards=args.shards)
+    print(f"[serve] mutable index bootstrapped: {corpus.n_docs} docs "
+          f"sealed in {time.perf_counter() - t0:.2f}s"
+          + (f", {args.shards} shards" if args.shards else ""))
+
+    queries = corpus.queries
+    rng = np.random.default_rng(7)
+    term_pool = sorted({t for q in queries for t in q})
+    for i in range(n_mut):
+        k = int(rng.integers(1, 4))
+        mi.add(sorted(rng.choice(term_pool, size=k,
+                                 replace=False).tolist()))
+        if n_mut > 1 and i == n_mut // 2:
+            mi.seal()                   # live stream: seal mid-mutation
+    n_del = int(del_frac * n_mut)
+    if n_del:
+        for d in rng.choice(mi.next_doc_id, size=n_del, replace=False):
+            mi.delete(int(d))
+    c = mi.counters()
+    print(f"[serve] mutable index: +{n_mut} docs / -{n_del} tombstones -> "
+          f"generation {c['generation']}, {c['n_segments']} sealed "
+          f"segments + {c['mutable_docs']} mutable docs, "
+          f"{c['tombstones']} tombstones, {c['n_seals']} seals, "
+          f"vocab {c['vocab']}")
+
+    def run_all(stats=None):
+        stats = {} if stats is None else stats
+        out = []
+        for lo in range(0, len(queries), args.batch):
+            out.extend(mi.execute_batch(queries[lo: lo + args.batch],
+                                        backend=args.backend,
+                                        fuse=args.fuse, stats=stats))
+        return out, stats
+
+    t0 = time.perf_counter()
+    c0 = batch_lib._compile_count()
+    n_sigs, passes, converged = batch_lib.warm_to_fixed_point(
+        lambda s: run_all(stats=s))
+    if args.warmup:
+        print(f"[serve] warmup: {batch_lib._compile_count() - c0} compiles "
+              f"over {n_sigs} signatures in {passes} passes "
+              f"({time.perf_counter() - t0:.2f}s)")
+    if not converged:
+        print("[serve] warning: signature warm loop stopped at max_passes "
+              "without converging — the timed run may pay hidden compiles")
+
+    # timed loop under a live background merge: the candidate generation
+    # pre-warms through the shared sticky plan before the atomic swap
+    merge_thread = mi.merge_async(warm_queries=queries,
+                                  backend=args.backend)
+    stats: dict = {}
+    t0 = time.perf_counter()
+    loops = 0
+    while loops == 0 or (merge_thread.is_alive() and loops < 64):
+        results, _ = run_all(stats=stats)
+        loops += 1
+    dt = time.perf_counter() - t0
+    merge_thread.join()
+    n_q = loops * len(queries)
+    hits = sum(r.count for r in results)
+    c = mi.counters()
+    print(f"[serve] paper-index --mutate {n_mut} "
+          f"--delete-frac {del_frac:g} ({args.backend}"
+          f"{', fused' if args.fuse else ', unfused'}, "
+          f"batch {args.batch}): {n_q} queries in {loops} loops during "
+          f"background merge, {n_q / dt:.1f} q/s "
+          f"({dt / n_q * 1e3:.2f} ms/query), {hits} hits, "
+          f"{stats.get('n_compiles', 0)} compiles")
+    print(f"[serve]   post-merge: generation {c['generation']}, "
+          f"{c['n_segments']} segments, {c['n_merges']} merges, "
+          f"{c['next_doc_id']} doc ids ({c['tombstones']} tombstoned)")
+
+    # differential: the served state vs a rebuild-from-scratch index
+    idx = builder.build(mi.live_postings(), max(mi.next_doc_id, 1),
+                        codec_name=_codec_name(args), B=16, n_parts=2)
+    final, _ = run_all()
+    for q, got in zip(queries, final):
+        want = engine.query(idx, q)
+        assert got.count == want.count and \
+            np.array_equal(got.docs, want.docs), f"mismatch on {q}"
+    print(f"[serve] differential check: {len(queries)} queries "
+          f"byte-identical to rebuild-from-scratch")
+    return final
 
 
 def serve_index_sharded(args, corpus):
@@ -410,6 +535,16 @@ def main():
                     help="paper-index: posting-list codec family (auto = "
                          "the cost-model storage autotuner picks codec + "
                          "skip policy per list; DESIGN.md §2.13)")
+    ap.add_argument("--mutate", type=int, default=0, metavar="N",
+                    help="paper-index: live-corpus demo — apply N adds "
+                         "(with a mid-stream seal) plus --delete-frac "
+                         "tombstones to a segmented mutable index, then "
+                         "serve the timed loop during a background merge "
+                         "and differential-check against a rebuild "
+                         "(DESIGN.md §2.14; implies batched mode)")
+    ap.add_argument("--delete-frac", type=float, default=None, metavar="F",
+                    help="paper-index: fraction of --mutate adds to "
+                         "tombstone (default 0.1; requires --mutate)")
     ap.add_argument("--cache", action="store_true",
                     help="paper-index: serve with a DecodeCache and report "
                          "its hit rate")

@@ -196,14 +196,23 @@ class ContinuousBatchingServer:
 
     ``sharded`` (a ``shard.ShardedIndex``) swaps the launch seam for the
     SPMD fan-out — everything else, including byte-identity, is
-    unchanged."""
+    unchanged.
 
-    def __init__(self, index, *, backend: str = "jax", max_batch: int = 32,
+    ``mutable`` (a ``segments.MutableIndex``) serves a *live* corpus:
+    every flush snapshots the current generation + mutable-segment prefix
+    lock-free, launches against that snapshot, and completes at collect
+    with tombstone filtering + the decoded-path mutable hits
+    (``MutableIndex.finalize``).  The server shares the mutable index's
+    sticky plan, so a background generation swap pre-warmed through it
+    keeps steady state at 0 compiles."""
+
+    def __init__(self, index=None, *, backend: str = "jax",
+                 max_batch: int = 32,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  depth: int = 2, max_results: int = 1 << 16,
                  max_group_size: int = batch_lib.MAX_GROUP_SIZE,
                  cache=None, pool=None, fuse: bool = True, plan=None,
-                 sharded=None, drain: bool = False,
+                 sharded=None, mutable=None, drain: bool = False,
                  stats: dict | None = None,
                  metrics: ServerMetrics | None = None):
         assert max_batch >= 1 and depth >= 1 and max_queue >= 1
@@ -218,8 +227,13 @@ class ContinuousBatchingServer:
         self.cache = cache
         self.pool = pool
         self.fuse = fuse
-        self.plan = (plan if plan is not None
-                     else (batch_lib.FusionPlan() if fuse else None))
+        self.mutable = mutable
+        if plan is not None:
+            self.plan = plan
+        elif mutable is not None:
+            self.plan = mutable.plan       # share the sticky plan: merges
+        else:                              # pre-warm through it pre-swap
+            self.plan = batch_lib.FusionPlan() if fuse else None
         self.sharded = sharded
         self.drain = drain
         self.stats: dict = {} if stats is None else stats
@@ -229,8 +243,17 @@ class ContinuousBatchingServer:
 
     # -- the dispatch seam (mirrors execute_pipelined's default hooks) -----
 
-    def _schedule(self, chunk, stats, account: bool = True):
-        if self.sharded is not None:
+    def _snapshot(self):
+        """One lock-free state grab per flush (``None`` on frozen indexes);
+        schedule/launch/finalize of that flush all serve this snapshot, so
+        a concurrent generation swap never splits a batch."""
+        return self.mutable.snapshot() if self.mutable is not None else None
+
+    def _schedule(self, chunk, stats, account: bool = True, snap=None):
+        if snap is not None:
+            groups = self.mutable.schedule(snap, chunk, stats=stats,
+                                           cache=self.cache)
+        elif self.sharded is not None:
             groups = batch_lib.schedule(self.sharded.index, chunk,
                                         pool=self.sharded.pool_map,
                                         stats=stats)
@@ -250,7 +273,12 @@ class ContinuousBatchingServer:
                                            stats=stats)
         return groups
 
-    def _launch(self, groups, n_queries, stats):
+    def _launch(self, groups, n_queries, stats, snap=None):
+        if snap is not None:
+            return self.mutable.launch(
+                snap, groups, n_queries, backend=self.backend,
+                max_results=self.max_results,
+                max_group_size=self.max_group_size, stats=stats)
         if self.sharded is not None:
             from repro.index import shard as shard_lib
             return shard_lib.launch_groups_sharded(
@@ -352,11 +380,17 @@ class ContinuousBatchingServer:
             m.flush_deadline += 1
         else:
             m.flush_drain += 1
-        groups = self._schedule([r.terms for r in reqs], self.stats)
-        pending = self._launch(groups, len(reqs), self.stats)
+        snap = self._snapshot()
+        groups = self._schedule([r.terms for r in reqs], self.stats,
+                                snap=snap)
+        pending = self._launch(groups, len(reqs), self.stats, snap=snap)
 
         def collect():
             results = batch_lib.collect_batch(pending)
+            if snap is not None:
+                results = self.mutable.finalize(
+                    snap, [r.terms for r in reqs], results,
+                    self.max_results)
             done = time.perf_counter()
             for r, res in zip(reqs, results):
                 r.result = res
@@ -422,9 +456,14 @@ def warm_server(server: ContinuousBatchingServer,
     t0 = time.perf_counter()
     c0 = batch_lib._compile_count()
     if queries is None:
+        if server.mutable is not None:
+            view = server.mutable.snapshot().gen.view
+        elif server.sharded is not None:
+            view = server.sharded.index
+        else:
+            view = server.index
         queries = batch_lib.synth_warmup_queries(
-            server.sharded.index if server.sharded is not None
-            else server.index, 2 * server.max_batch, seed=seed)
+            view, 2 * server.max_batch, seed=seed)
 
     # every ×1.5-ladder bucket a 1..max_batch flush can land in
     sizes, b = [], 1
@@ -437,8 +476,11 @@ def warm_server(server: ContinuousBatchingServer,
         for size in sizes:
             for lo in range(0, len(queries), size):
                 chunk = queries[lo: lo + size]
-                groups = server._schedule(chunk, stats, account=False)
-                pending = server._launch(groups, len(chunk), stats)
+                snap = server._snapshot()
+                groups = server._schedule(chunk, stats, account=False,
+                                          snap=snap)
+                pending = server._launch(groups, len(chunk), stats,
+                                         snap=snap)
                 batch_lib.collect_batch(pending)
 
     n_signatures, passes, converged = batch_lib.warm_to_fixed_point(one_pass)

@@ -1,46 +1,147 @@
-"""Optional-`hypothesis` shim so the tier-1 suite collects on clean machines.
+"""Optional-`hypothesis` shim so the tier-1 suite runs on clean machines.
 
-Import ``given``, ``settings`` and ``st`` from here instead of `hypothesis`.
-When the real package is installed, these are the real objects.  When it is
-not, property tests decorated with ``@given(...)`` are replaced by a no-arg
-stub carrying a skip marker with a clear reason, and ``settings``/``st``
-become inert stand-ins (the strategy objects they build are never executed).
+Import ``given``, ``settings``, ``st`` and ``HealthCheck`` from here instead
+of `hypothesis`.  When the real package is installed (CI installs it via
+``requirements-dev.txt``), these are the real objects and the property
+tests get shrinking, the example database, and ``--hypothesis-seed``
+pinning.  When it is not, a small deterministic fallback engine stands in:
+each ``@given`` test runs ``max_examples`` generated examples drawn from a
+seeded PRNG (``REPRO_PROP_SEED`` env, default 0), so the op-sequence
+differential harnesses still *execute* — no silent skips — just without
+shrinking.  A failing fallback example prints its seed and index so the
+exact case replays.
+
+Only the strategy surface the suite uses is implemented: ``integers``,
+``booleans``, ``just``, ``sampled_from``, ``lists`` (with ``unique``),
+``tuples``, ``one_of``, ``data``.
 """
 
 from __future__ import annotations
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import HealthCheck, given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:                                   # pragma: no cover
-    import pytest
+    import functools
+    import inspect
+    import os
+    import random
 
     HAVE_HYPOTHESIS = False
 
-    class _StrategyStub:
-        """Builds inert placeholders for st.integers(...), st.data(), ..."""
+    _FALLBACK_EXAMPLES = 25
 
-        def __getattr__(self, name):
-            def make(*args, **kwargs):
-                return None
-            return make
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
 
-    st = _StrategyStub()
+        def example_with(self, rng: random.Random):
+            return self._draw(rng)
 
-    def given(*args, **kwargs):
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                if not unique:
+                    return [elements.example_with(rng) for _ in range(n)]
+                out, seen = [], set()
+                for _ in range(8 * n + 8):          # bounded retry
+                    v = elements.example_with(rng)
+                    k = repr(v)
+                    if k not in seen:
+                        seen.add(k)
+                        out.append(v)
+                    if len(out) == n:
+                        break
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.example_with(rng) for s in strategies))
+
+        @staticmethod
+        def one_of(*strategies):
+            return _Strategy(
+                lambda rng: strategies[rng.randrange(len(strategies))]
+                .example_with(rng))
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda rng: _Data(rng))
+
+    class _Data:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example_with(self._rng)
+
+    st = _St()
+
+    def given(*gargs, **gkwargs):
         def deco(fn):
-            # Return a no-arg stub: pytest must not try to resolve the
-            # strategy parameters of the wrapped property test as fixtures.
-            @pytest.mark.skip(reason="hypothesis not installed "
-                                     "(see requirements-dev.txt)")
-            def stub():
-                pass
-            stub.__name__ = fn.__name__
-            stub.__doc__ = fn.__doc__
-            return stub
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            bound = dict(gkwargs)
+            if gargs:          # positional strategies bind rightmost params
+                for name, strat in zip(names[len(names) - len(gargs):],
+                                       gargs):
+                    bound[name] = strat
+            rest = [p for p in sig.parameters.values()
+                    if p.name not in bound]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                base = int(os.environ.get("REPRO_PROP_SEED", "0"))
+                for i in range(n):
+                    rng = random.Random(f"{base}:{fn.__qualname__}:{i}")
+                    drawn = {k: s.example_with(rng)
+                             for k, s in bound.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception:
+                        print(f"[property-fallback] falsifying example "
+                              f"{i + 1}/{n} of {fn.__qualname__} "
+                              f"(REPRO_PROP_SEED={base}): {drawn!r}")
+                        raise
+
+            # pytest must see only the non-strategy params as fixtures
+            wrapper.__signature__ = sig.replace(parameters=rest)
+            return wrapper
         return deco
 
     def settings(*args, **kwargs):
+        max_examples = kwargs.get("max_examples")
+
         def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
             return fn
         return deco
+
+    class HealthCheck:
+        """Inert stand-in; attribute access returns opaque tokens."""
+        def __getattr__(self, name):
+            return name
+    HealthCheck = HealthCheck()

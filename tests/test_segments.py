@@ -1,0 +1,328 @@
+"""Unit tests for the mutable segmented index (DESIGN.md §2.14): segment
+lifecycle, tombstone filtering, generation-tagged residency, merge fault
+injection, and serving-during-background-merge.  The generative
+op-sequence coverage lives in ``test_segments_prop.py``; these tests pin
+the individual mechanisms that harness exercises in aggregate."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.index import batch as batch_lib
+from repro.index import builder, engine, segments
+
+pytestmark = pytest.mark.segments
+
+V = 8
+CODEC = "bp-d1"
+B = 16
+
+
+def _seed_corpus(n_docs=400, seed=3):
+    """A mixed-density corpus: terms 0..3 are dense (sealed as bitmaps),
+    terms 4..7 sparse (sealed as packed lists under B=16)."""
+    rng = np.random.default_rng(seed)
+    post = []
+    for t in range(V):
+        p = 0.5 / (1 + t) if t < 4 else 0.015
+        keep = rng.random(n_docs) < p
+        post.append(np.flatnonzero(keep).astype(np.int64))
+    return post
+
+
+def _model_from(postings):
+    model = {}
+    for t, docs in enumerate(postings):
+        for d in docs.tolist():
+            model.setdefault(int(d), set()).add(t)
+    return model
+
+
+def _oracle(model, n_docs):
+    post = [np.asarray(sorted(d for d, ts in model.items() if t in ts),
+                       dtype=np.int64) for t in range(V)]
+    return builder.build(post, max(n_docs, 1), codec_name=CODEC, B=B,
+                         n_parts=2)
+
+
+QUERIES = [[t] for t in range(V)] + [[0, 1], [2, 5], [1, 3, 6], [0, 4, 7]]
+
+
+def _assert_identical(mi, model, *, backend="jax", fuse=True, stats=None):
+    got = mi.execute_batch([list(q) for q in QUERIES], backend=backend,
+                           fuse=fuse, stats=stats)
+    idx = _oracle(model, mi.next_doc_id)
+    for q, g in zip(QUERIES, got):
+        w = engine.query(idx, list(q))
+        assert g.count == w.count, (q, g.count, w.count)
+        assert np.array_equal(g.docs, w.docs)
+        assert g.docs.dtype == np.int64
+
+
+def _mutated_index(n_shards=0):
+    """Seed corpus -> adds -> seal -> more adds -> deletes: two sealed
+    segments plus a live mutable segment plus tombstones in both."""
+    post = _seed_corpus()
+    model = _model_from(post)
+    mi = segments.MutableIndex.from_postings(
+        post, 400, codec_name=CODEC, B=B, n_parts=2, n_shards=n_shards)
+    rng = np.random.default_rng(11)
+    for _ in range(60):
+        terms = sorted(rng.choice(V, size=rng.integers(1, 4),
+                                  replace=False).tolist())
+        model[mi.add(terms)] = set(terms)
+    mi.seal()
+    for _ in range(25):
+        terms = sorted(rng.choice(V, size=rng.integers(1, 4),
+                                  replace=False).tolist())
+        model[mi.add(terms)] = set(terms)
+    for d in rng.choice(sorted(model), size=90, replace=False).tolist():
+        mi.delete(int(d))
+        del model[int(d)]
+    return mi, model
+
+
+# -- basic lifecycle --------------------------------------------------------
+
+def test_mutable_only_matches_oracle():
+    mi = segments.MutableIndex(codec_name=CODEC, B=B, n_parts=2)
+    model = {}
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        terms = sorted(rng.choice(V, size=rng.integers(1, 4),
+                                  replace=False).tolist())
+        model[mi.add(terms)] = set(terms)
+    _assert_identical(mi, model)
+    assert mi.counters()["n_segments"] == 0
+    assert mi.counters()["mutable_docs"] == 50
+
+
+def test_seal_then_mutate_matches_oracle():
+    mi, model = _mutated_index()
+    c = mi.counters()
+    assert c["n_segments"] == 2 and c["mutable_docs"] == 25
+    assert c["tombstones"] == 90 and c["n_seals"] == 1
+    _assert_identical(mi, model)
+
+
+def test_add_rejects_empty_and_delete_validates():
+    mi = segments.MutableIndex()
+    with pytest.raises(ValueError):
+        mi.add([])
+    gid = mi.add([0, 1])
+    with pytest.raises(KeyError):
+        mi.delete(gid + 1)                      # never assigned
+    assert mi.delete(gid) is True
+    assert mi.delete(gid) is False              # idempotent
+
+
+def test_seal_empty_is_noop():
+    mi = segments.MutableIndex()
+    assert mi.seal() is None
+    assert mi.generation == 0 and mi.counters()["n_seals"] == 0
+
+
+def test_vocab_growth_new_term_after_seal():
+    """A term id first seen after a seal must read as empty in the older
+    sealed segment (TermMap), not raise, and still match the oracle."""
+    mi = segments.MutableIndex(codec_name=CODEC, B=B)
+    model = {}
+    for i in range(30):
+        model[mi.add([i % 3])] = {i % 3}
+    mi.seal()
+    for i in range(10):
+        terms = {i % 3, 6}                      # term 6: post-seal vocab
+        model[mi.add(sorted(terms))] = terms
+    got = mi.execute_batch([[6], [0, 6], [5]])
+    idx = _oracle(model, mi.next_doc_id)
+    for q, g in zip([[6], [0, 6], [5]], got):
+        w = engine.query(idx, list(q))
+        assert g.count == w.count and np.array_equal(g.docs, w.docs)
+
+
+def test_tombstones_filter_bitmap_and_list_postings():
+    """The seed corpus serves term 0 as a bitmap and sparser terms as
+    packed lists; deletes must filter both at collect."""
+    mi, model = _mutated_index()
+    view = mi._state[0].view
+    kinds = {tp.kind for part in view.parts
+             for tp in part.terms.values() if tp.kind != "empty"}
+    assert "bitmap" in kinds and "list" in kinds
+    _assert_identical(mi, model, fuse=False)
+
+
+def test_delete_changes_no_signatures():
+    """Deletes are collect-time only: a warmed steady state stays at zero
+    compiles while tombstones accumulate."""
+    mi, model = _mutated_index()
+    mi.warm([list(q) for q in QUERIES])
+    for d in sorted(model)[:20]:
+        mi.delete(int(d))
+        del model[int(d)]
+    stats = {}
+    _assert_identical(mi, model, stats=stats)
+    assert stats.get("n_compiles", 0) == 0
+
+
+# -- merge ------------------------------------------------------------------
+
+def test_merge_compacts_and_matches_oracle():
+    mi, model = _mutated_index()
+    assert mi.merge() is True
+    c = mi.counters()
+    assert c["n_merges"] == 1 and c["n_segments"] == 1
+    _assert_identical(mi, model)
+    # tombstoned docs were physically reclaimed: the decoded live corpus
+    # is exactly the model, with no dead ids surviving in sealed payloads
+    live = mi.live_postings()
+    for t in range(V):
+        want = np.asarray(sorted(d for d, ts in model.items() if t in ts),
+                          dtype=np.int64)
+        assert np.array_equal(live[t], want)
+
+
+def test_merge_noop_when_nothing_to_compact():
+    post = _seed_corpus()
+    mi = segments.MutableIndex.from_postings(post, 400, codec_name=CODEC,
+                                             B=B)
+    assert mi.merge() is False                  # 1 segment, 0 tombstones
+    assert mi.counters()["n_merges"] == 0
+
+
+STAGES = ["snapshot", "decode", "build", "stage", "warm", "swap"]
+
+
+class _Crash(RuntimeError):
+    pass
+
+
+@pytest.mark.parametrize("crash_at", STAGES)
+def test_merge_fault_injection_leaves_old_generation(crash_at):
+    """A crash at ANY merge phase boundary must leave the old generation
+    serving byte-identical, and a retry must converge."""
+    mi, model = _mutated_index()
+    gen0 = mi.generation
+    before = mi.execute_batch([list(q) for q in QUERIES])
+
+    def hook(stage):
+        if stage == crash_at:
+            raise _Crash(stage)
+
+    with pytest.raises(_Crash):
+        mi.merge(hook=hook)
+    assert mi.generation == gen0                # nothing published
+    assert mi.counters()["n_merges"] == 0
+    after = mi.execute_batch([list(q) for q in QUERIES])
+    for b, a in zip(before, after):
+        assert b.count == a.count and np.array_equal(b.docs, a.docs)
+    _assert_identical(mi, model)
+
+    assert mi.merge() is True                   # retry converges
+    assert mi.counters()["n_merges"] == 1
+    _assert_identical(mi, model)
+
+
+def test_merge_guard_rejects_concurrent_merge():
+    mi, model = _mutated_index()
+    entered, release = threading.Event(), threading.Event()
+
+    def hook(stage):
+        if stage == "decode":
+            entered.set()
+            release.wait(timeout=30)
+
+    t = mi.merge_async(hook=hook)
+    assert entered.wait(timeout=30)
+    assert mi.merge() is False                  # guard: one merge at a time
+    release.set()
+    t.join(timeout=60)
+    assert mi.counters()["n_merges"] == 1
+    _assert_identical(mi, model)
+
+
+def test_merge_absorbs_seal_published_mid_merge():
+    """A seal landing between the merge snapshot and the swap must survive
+    into the published generation (late-segment rebuild under the lock)."""
+    mi, model = _mutated_index()
+    late = {}
+
+    def hook(stage):
+        if stage == "stage":                    # off-lock: mutate + seal
+            for terms in ([1, 2], [0, 7]):
+                late[mi.add(terms)] = set(terms)
+            mi.seal()
+
+    assert mi.merge(hook=hook) is True
+    model.update(late)
+    _assert_identical(mi, model)
+    assert mi.counters()["n_segments"] == 2     # merged + late-sealed
+
+
+def test_serving_never_pauses_during_background_merge():
+    mi, model = _mutated_index()
+    mi.warm([list(q) for q in QUERIES])
+    gen0 = mi.generation
+    mid_merge = threading.Event()
+
+    def hook(stage):
+        if stage == "build":
+            mid_merge.set()
+
+    t = mi.merge_async(hook=hook)
+    assert mid_merge.wait(timeout=60)
+    _assert_identical(mi, model)                # served while compacting
+    t.join(timeout=120)
+    assert not t.is_alive()
+    assert mi.generation > gen0
+    _assert_identical(mi, model)
+
+
+def test_merge_warm_keeps_zero_compiles_across_swap():
+    """The acceptance bar: warm, background-merge with pre-warm through
+    the shared plan, and the first post-swap batch compiles nothing."""
+    mi, model = _mutated_index()
+    queries = [list(q) for q in QUERIES]
+    mi.warm(queries)
+    assert mi.merge(warm_queries=queries) is True
+    stats = {}
+    _assert_identical(mi, model, stats=stats)
+    assert stats.get("n_compiles", 0) == 0
+
+
+# -- residency / generations ------------------------------------------------
+
+def test_generation_pool_tag_tracks_gid():
+    mi, _ = _mutated_index()
+    gen = mi._state[0]
+    assert gen.pool is not None
+    assert gen.pool.tag == gen.gid
+    assert mi.stats()["residency"]["tag"] == gen.gid
+
+
+def test_seal_carries_resident_buffers_forward():
+    """Sealing must not re-transfer the previous generation's postings:
+    the new pool carries the old generation's device buffers, keyed by
+    the preserved part uids."""
+    post = _seed_corpus()
+    mi = segments.MutableIndex.from_postings(post, 400, codec_name=CODEC,
+                                             B=B, n_parts=2)
+    old = mi._state[0]
+    old_keys = set(old.pool._store)
+    assert old_keys, "seed generation staged nothing"
+    for terms in ([0, 1], [2, 3], [4, 5]):
+        mi.add(terms)
+    mi.seal()
+    new = mi._state[0]
+    assert new.pool is not old.pool
+    assert old_keys <= set(new.pool._store)     # carried, same uid keys
+    for key in old_keys:                        # same device buffers reused
+        assert new.pool._store[key]["dev"] is old.pool._store[key]["dev"]
+
+
+def test_sharded_lifecycle_matches_oracle():
+    mi, model = _mutated_index(n_shards=2)
+    assert mi._state[0].sharded is not None
+    _assert_identical(mi, model)
+    assert mi.merge() is True
+    _assert_identical(mi, model, backend="pallas", fuse=False)

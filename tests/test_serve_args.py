@@ -13,7 +13,7 @@ from repro.launch.serve import coerce_index_flags
 def _ns(**kw):
     base = dict(batch=0, pipeline=0, shards=0, resident=False, fuse=True,
                 warmup=False, cache=False, queries=20, backend="jax",
-                shared_vocab=False, tokens=16)
+                shared_vocab=False, tokens=16, mutate=0, delete_frac=None)
     base.update(kw)
     return argparse.Namespace(**base)
 
@@ -70,3 +70,43 @@ def test_warmup_without_fuse_warns():
 def test_warmup_with_fuse_silent():
     a = _ns(batch=8, warmup=True)
     assert coerce_index_flags(a) == []
+
+
+def test_mutate_implies_batched_and_resident():
+    a = _ns(mutate=100)
+    w = coerce_index_flags(a)
+    assert a.batch == 32 and a.resident
+    assert len(w) == 2
+    assert any("--batch" in m for m in w)
+    assert any("--resident" in m for m in w)
+
+
+def test_mutate_drops_pipeline_and_cache_with_warnings():
+    a = _ns(mutate=100, batch=16, resident=True, pipeline=2, cache=True)
+    w = coerce_index_flags(a)
+    assert a.pipeline == 0 and not a.cache
+    assert len(w) == 2
+    assert any("--pipeline" in m for m in w)
+    assert any("--cache" in m for m in w)
+    assert a.batch == 16                          # explicit value kept
+
+
+def test_mutate_with_explicit_flags_silent():
+    a = _ns(mutate=100, batch=16, resident=True, delete_frac=0.2)
+    assert coerce_index_flags(a) == []
+    assert a.delete_frac == 0.2
+
+
+def test_delete_frac_without_mutate_warns_and_clears():
+    a = _ns(batch=8, delete_frac=0.5)
+    w = coerce_index_flags(a)
+    assert len(w) == 1 and "--delete-frac" in w[0]
+    assert a.delete_frac is None
+
+
+def test_mutate_composes_with_shards_unwarned():
+    """--mutate handles sharding itself (per-generation ShardedIndex), so
+    --shards adds none of its frozen-path coercions on top."""
+    a = _ns(mutate=100, batch=16, resident=True, shards=2)
+    assert coerce_index_flags(a) == []
+    assert a.pipeline == 0 and a.shards == 2

@@ -19,7 +19,8 @@ import numpy as np
 import pytest
 
 from repro.index import batch as batch_lib
-from repro.index import builder, corpus as corpus_lib, engine, source
+from repro.index import builder, corpus as corpus_lib, engine, segments, \
+    source
 from repro.index import shard as shard_lib
 from repro.launch import server as server_lib
 
@@ -237,3 +238,164 @@ def test_warm_to_fixed_point_reports_convergence():
 
     n, passes, converged = batch_lib.warm_to_fixed_point(settles)
     assert converged and n == 1 and passes == 2
+
+
+# --------------------------------------------------------------------------
+# live mutation (ISSUE 9): a MutableIndex behind the server
+# --------------------------------------------------------------------------
+
+def _mutable_setup(n_queries=16, seed=7):
+    corpus = corpus_lib.synthesize(n_docs=1 << 13, n_queries=n_queries,
+                                   seed=seed)
+    mi = segments.MutableIndex.from_postings(
+        corpus.postings, corpus.n_docs, codec_name="fastpfor-d1", B=16,
+        n_parts=2)
+    terms = sorted({t for q in corpus.queries for t in q})
+    return mi, corpus, terms
+
+
+def _compile_accounting_available():
+    return getattr(batch_lib._svs_program, "_cache_size", None) is not None
+
+
+def test_server_live_mutation_windows_match_offline():
+    """Rounds of adds/deletes between Poisson serving windows: every
+    window's served results equal offline ``MutableIndex.execute_batch``
+    on the then-current state, at zero compiles once warmed — including
+    across a seal + background-style merge (generation swap)."""
+    mi, corpus, terms = _mutable_setup()
+    stats: dict = {}
+    srv = server_lib.ContinuousBatchingServer(
+        mutable=mi, max_batch=4, max_wait_ms=1.0, max_queue=1024,
+        stats=stats)
+    wu = server_lib.warm_server(srv, corpus.queries)
+    assert wu["converged"]
+    check_compiles = _compile_accounting_available()
+    rng = np.random.default_rng(2)
+
+    def mutate(n_adds=20, n_dels=5):
+        for _ in range(n_adds):
+            k = int(rng.integers(1, min(4, len(terms)) + 1))
+            doc = sorted(rng.choice(terms, size=k, replace=False).tolist())
+            mi.add(doc)
+        for _ in range(n_dels):
+            mi.delete(int(rng.integers(0, mi.next_doc_id)))
+
+    def window(seed, steady=True):
+        stats.pop("n_compiles", None)
+        gaps = server_lib.arrival_gaps(len(corpus.queries), 2000.0,
+                                       "poisson", seed=seed)
+        results = asyncio.run(srv.run(corpus.queries, gaps))
+        assert srv.metrics.n_shed == 0
+        offline = mi.execute_batch(corpus.queries)
+        _assert_identical(results, offline)
+        if steady and check_compiles:
+            assert stats.get("n_compiles", 0) == 0
+
+    # window 0 converges the plan: the AOT ladder warms contiguous chunk
+    # packings, live Poisson packings are arbitrary subsets — the first
+    # window raises the family ceilings over them, after which the sticky
+    # plan covers ANY packing (the steady-state claim under test)
+    mutate()
+    window(seed=0, steady=False)
+    for r in range(1, 3):
+        mutate()
+        window(seed=r)
+
+    # generation swap: seal + merge pre-warmed through the *shared* sticky
+    # plan; the first post-swap window must still compile nothing
+    mutate()
+    assert mi.seal() is not None
+    assert mi.merge(warm_queries=corpus.queries) is True
+    window(seed=99)
+    assert mi.counters()["n_merges"] == 1
+
+
+def test_server_mutations_between_flushes_under_poisson():
+    """Mutations injected *between flushes* (at the server's snapshot
+    seam) while Poisson traffic is in flight: each flush's served results
+    must equal a python set-model oracle evaluated at that flush's
+    snapshot — the per-flush byte-identity the windowed test can't see."""
+    mi, corpus, terms = _mutable_setup()
+    model = {t: set(corpus.postings[t].tolist()) for t in terms}
+    dead: set[int] = set()
+    rng = np.random.default_rng(4)
+
+    # depth=1 serializes flush -> collect -> next flush, so the model is
+    # stable from each snapshot through its finalize
+    srv = server_lib.ContinuousBatchingServer(
+        mutable=mi, max_batch=4, max_wait_ms=1.0, max_queue=1024, depth=1)
+    server_lib.warm_server(srv, corpus.queries)
+
+    muts = iter(range(64))
+
+    def mutate_once():
+        if next(muts, None) is None:
+            return
+        for _ in range(3):
+            k = int(rng.integers(1, min(4, len(terms)) + 1))
+            doc = sorted(rng.choice(terms, size=k, replace=False).tolist())
+            gid = mi.add(doc)
+            for t in doc:
+                model[t].add(gid)
+        d = int(rng.integers(0, mi.next_doc_id))
+        mi.delete(d)
+        dead.add(d)
+
+    orig_snapshot = srv._snapshot
+
+    def snapshot_with_mutation():
+        mutate_once()
+        return orig_snapshot()
+
+    srv._snapshot = snapshot_with_mutation
+
+    def oracle(q):
+        alive = set.intersection(*[model[t] for t in q]) - dead
+        return np.asarray(sorted(alive), dtype=np.int64)
+
+    checked = []
+    orig_finalize = mi.finalize
+
+    def checking_finalize(snap, queries, results, max_results=1 << 16):
+        out = orig_finalize(snap, queries, results, max_results)
+        for q, r in zip(queries, out):
+            want = oracle(q)
+            assert r.count == want.size, (q, r.count, want.size)
+            assert np.array_equal(r.docs, want)
+            checked.append(1)
+        return out
+
+    mi.finalize = checking_finalize
+    try:
+        stream = corpus.queries * 3
+        gaps = server_lib.arrival_gaps(len(stream), 1500.0, "poisson",
+                                       seed=5)
+        results = asyncio.run(srv.run(stream, gaps))
+    finally:
+        mi.finalize = orig_finalize
+        srv._snapshot = orig_snapshot
+    assert srv.metrics.n_shed == 0
+    assert all(r is not None for r in results)
+    assert len(checked) == len(stream)          # every request was checked
+    assert mi.counters()["mutable_docs"] > 0    # mutations really landed
+    assert mi.counters()["tombstones"] > 0
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_server_mutable_sharded_matches_offline(n_shards):
+    mi, corpus, terms = _mutable_setup(n_queries=10, seed=21)
+    if n_shards > 1:
+        mi = segments.MutableIndex.from_postings(
+            corpus.postings, corpus.n_docs, codec_name="fastpfor-d1",
+            B=16, n_parts=2, n_shards=n_shards)
+    rng = np.random.default_rng(8)
+    for _ in range(15):
+        k = int(rng.integers(1, min(4, len(terms)) + 1))
+        mi.add(sorted(rng.choice(terms, size=k, replace=False).tolist()))
+    for _ in range(4):
+        mi.delete(int(rng.integers(0, mi.next_doc_id)))
+    results, srv = server_lib.serve_open_loop(
+        None, corpus.queries, qps=0.0, mutable=mi, max_batch=4)
+    offline = mi.execute_batch(corpus.queries)
+    _assert_identical(results, offline)
