@@ -710,6 +710,92 @@ def _compression(quick: bool) -> None:
     RESULTS["compression/short_decode_win"] = round(win, 2)
 
 
+def _resilience(quick: bool) -> None:
+    """Fault-injected serving + recovery wall clock (DESIGN.md §2.15).
+
+    One open-loop Poisson window clean, one with injected transient
+    faults on the first three launches: the faulted window must lose
+    ZERO requests
+    (every submission resolves ``done``) and answer byte-identically —
+    the q/s and p99 deltas are the measured cost of the bounded-backoff
+    retry path.  Then a WAL-journaled mutable index takes a mutation
+    burst and is recovered from disk, timing the snapshot-load + WAL
+    replay path that a post-crash restart pays."""
+    import tempfile
+
+    import numpy as np
+    from repro.index import builder, corpus as corpus_lib, segments
+    from repro.launch import faults as faults_lib
+    from repro.launch import server as server_lib
+
+    n_docs = 1 << 14 if quick else 1 << 16
+    n_queries = 64 if quick else 256
+    corpus = corpus_lib.synthesize(n_docs=n_docs, n_queries=n_queries,
+                                   seed=17)
+    idx = builder.build(corpus.postings, corpus.n_docs,
+                        codec_name="fastpfor-d1", B=16, n_parts=2)
+
+    def window(injector=None):
+        results, srv = server_lib.serve_open_loop(
+            idx, corpus.queries, qps=2000.0, pattern="poisson", seed=2,
+            warmup=True, max_batch=8, max_queue=4096, injector=injector,
+            max_retries=6, retry_backoff_ms=0.5)
+        assert srv.outcomes() == ["done"] * n_queries   # zero lost requests
+        return results, srv.metrics.summary()
+
+    clean, s_clean = window()
+    # counted rule, not probabilistic: the smoke window only flushes a
+    # handful of batches, so a 1%-per-launch rule would usually fire
+    # zero times and the "faulted" figures would measure nothing
+    inj = faults_lib.FaultInjector("transient@launch:3", seed=12)
+    faulted, s_fault = window(injector=inj)
+    for a, b in zip(clean, faulted):                    # byte-identical
+        assert a.count == b.count and np.array_equal(a.docs, b.docs)
+    RESULTS["resilience/clean_qps"] = round(s_clean["qps"], 1)
+    RESULTS["resilience/clean_p99_ms"] = round(s_clean["p99_ms"], 2)
+    RESULTS["resilience/faulted_qps"] = round(s_fault["qps"], 1)
+    RESULTS["resilience/faulted_p99_ms"] = round(s_fault["p99_ms"], 2)
+    RESULTS["resilience/faults"] = s_fault["n_faults"]
+    RESULTS["resilience/retries"] = s_fault["n_retries"]
+    emit("engine/resilience/clean", 1.0 / max(s_clean["qps"], 1e-9),
+         f"{s_clean['qps']:.1f} q/s p99 {s_clean['p99_ms']:.2f} ms")
+    emit("engine/resilience/faulted", 1.0 / max(s_fault["qps"], 1e-9),
+         f"{s_fault['qps']:.1f} q/s p99 {s_fault['p99_ms']:.2f} ms "
+         f"({s_fault['n_faults']} faults, {s_fault['n_retries']} retries, "
+         f"0 lost)")
+
+    # recovery wall clock: snapshot load + WAL-tail replay after a burst
+    rng = np.random.default_rng(9)
+    term_pool = sorted({t for q in corpus.queries for t in q})
+    n_mut = 200 if quick else 1000
+    with tempfile.TemporaryDirectory() as wal_dir:
+        from repro.index import durability
+        mi = segments.MutableIndex.from_postings(
+            corpus.postings, corpus.n_docs, codec_name="fastpfor-d1",
+            B=16, n_parts=2, wal=durability.DurableLog(wal_dir))
+        for i in range(n_mut):
+            k = int(rng.integers(1, 4))
+            mi.add(sorted(rng.choice(term_pool, size=k,
+                                     replace=False).tolist()))
+            if i == n_mut // 2:
+                mi.seal()
+        for d in rng.choice(mi.next_doc_id, size=n_mut // 10,
+                            replace=False):
+            mi.delete(int(d))
+        t0 = time.perf_counter()
+        rec = segments.MutableIndex.recover(wal_dir)
+        dt = time.perf_counter() - t0
+        live = mi.execute_batch(corpus.queries)
+        back = rec.execute_batch(corpus.queries)
+        for a, b in zip(live, back):                    # byte-identical
+            assert a.count == b.count and np.array_equal(a.docs, b.docs)
+        RESULTS["resilience/recovery_s"] = round(dt, 3)
+        RESULTS["resilience/recovery_replayed"] = rec._wal_replayed
+        emit("engine/resilience/recovery", dt,
+             f"{dt * 1e3:.0f} ms to recover ({rec._wal_replayed} WAL "
+             f"records replayed, {rec.counters()['n_segments']} segments)")
+
+
 def run(quick: bool = False) -> None:
     _throughput(quick)
     _dispatch(quick)
@@ -718,6 +804,7 @@ def run(quick: bool = False) -> None:
     _sharded(quick)
     _latency(quick)
     _mutation(quick)
+    _resilience(quick)
 
 
 def _mode_mismatch(key: str, bres: dict) -> bool:

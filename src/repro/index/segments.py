@@ -70,6 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import numpy as np
 
@@ -111,10 +112,13 @@ def _wrap_terms(index: HybridIndex) -> HybridIndex:
 @dataclasses.dataclass
 class Segment:
     """One sealed, immutable doc-id range ``[doc_base, doc_hi)`` backed by a
-    normal ``builder.build`` index over its local id space."""
+    normal ``builder.build`` index over its local id space.  ``file`` names
+    the segment's persisted raw-postings file in a ``DurableLog`` segment
+    store (None while the index runs without a WAL)."""
     doc_base: int
     doc_hi: int
     index: HybridIndex
+    file: "str | None" = None
 
     @property
     def span(self) -> int:
@@ -219,7 +223,8 @@ class MutableIndex:
                  n_parts: int = 1, n_shards: int = 0,
                  capacity_ints: int = 1 << 26,
                  varint_tail_below: int = 1024,
-                 plan: "batch_lib.FusionPlan | None" = None):
+                 plan: "batch_lib.FusionPlan | None" = None,
+                 wal=None):
         self.codec_name = codec_name
         self.B = B
         self.n_parts = max(n_parts, 1)
@@ -236,9 +241,21 @@ class MutableIndex:
         self._merging = False
         self.n_seals = 0
         self.n_merges = 0
+        self._last_merge_error: str | None = None
+        self._merge_failures = 0
+        # durability (DESIGN.md §2.15): when a DurableLog is attached,
+        # every mutation is WAL-appended *before* it is applied, and
+        # seal/merge/bootstrap commit atomic snapshots.  _wal_replaying
+        # suppresses appends while recovery drives mutations back through
+        # these same paths.
+        self._wal = wal
+        self._wal_replaying = False
         gen = self._new_generation([], carry=None)
         self._state: tuple[Generation, MutableSegment] = \
             (gen, MutableSegment(0))
+        if wal is not None:
+            wal.start_fresh()
+            self._wal_checkpoint()
 
     # -- construction ------------------------------------------------------
 
@@ -253,9 +270,20 @@ class MutableIndex:
             mi._next_id = n_docs
             mi._ensure_dead(n_docs)
             seg = mi._build_segment(0, n_docs, list(postings))
+            if mi._wal is not None:
+                mi._wal.persist_segment(seg, list(postings))
             gen = mi._new_generation([seg], carry=mi._state[0])
             mi._state = (gen, MutableSegment(n_docs))
+            mi._wal_checkpoint()
         return mi
+
+    @classmethod
+    def recover(cls, directory: str, **kw) -> "MutableIndex":
+        """Rebuild from a ``DurableLog`` directory: newest readable
+        snapshot + WAL-tail replay, byte-identical to the pre-crash index
+        (DESIGN.md §2.15)."""
+        from repro.index import durability
+        return durability.recover(directory, **kw)
 
     # -- mutation ----------------------------------------------------------
 
@@ -272,6 +300,7 @@ class MutableIndex:
         if not terms:
             raise ValueError("a document needs at least one term")
         with self._lock:
+            self._wal_append("add", {"terms": terms})
             self._vocab = max(self._vocab, max(terms) + 1)
             # grow the tombstone bitmap here (adds already hold the lock)
             # so delete() can always set its bit in place — an in-place
@@ -291,6 +320,7 @@ class MutableIndex:
                 raise KeyError(f"doc id {doc_id} was never assigned")
             if self._dead[doc_id]:
                 return False
+            self._wal_append("delete", {"doc": int(doc_id)})
             self._dead[doc_id] = True
             self._n_dead += 1
             return True
@@ -298,19 +328,79 @@ class MutableIndex:
     def seal(self) -> "Segment | None":
         """Freeze the mutable segment into a sealed one and publish a new
         generation.  Concurrent queries keep serving the old state until
-        the single reference swap; concurrent adds briefly wait here."""
+        the single reference swap; concurrent adds briefly wait here.
+
+        Crash protocol (DESIGN.md §2.15): the ``seal`` WAL record lands
+        first, then the in-memory apply, then the snapshot checkpoint.  A
+        crash before the append loses nothing; after the append, replaying
+        the old snapshot + WAL re-derives the identical sealed segment
+        (the builder is deterministic); after the checkpoint, the new
+        manifest is authoritative and the record is never replayed."""
         with self._lock:
             gen, mseg = self._state
             if mseg.n_docs == 0:
                 return None
-            postings = [
-                np.asarray(mseg.postings.get(t, []), dtype=np.int64)
-                for t in range(self._vocab)]
-            seg = self._build_segment(mseg.doc_base, mseg.n_docs, postings)
-            new_gen = self._new_generation(gen.segments + [seg], carry=gen)
-            self._state = (new_gen, MutableSegment(self._next_id))
-            self.n_seals += 1
+            self._wal_append("seal", {})
+            seg = self._apply_seal()
+            self._wal_checkpoint()
             return seg
+
+    def _apply_seal(self) -> "Segment":
+        """The in-memory seal (lock held, mutable segment non-empty)."""
+        gen, mseg = self._state
+        postings = [
+            np.asarray(mseg.postings.get(t, []), dtype=np.int64)
+            for t in range(self._vocab)]
+        seg = self._build_segment(mseg.doc_base, mseg.n_docs, postings)
+        if self._wal is not None:
+            self._wal.persist_segment(seg, postings)
+        new_gen = self._new_generation(gen.segments + [seg], carry=gen)
+        self._state = (new_gen, MutableSegment(self._next_id))
+        self.n_seals += 1
+        return seg
+
+    # -- durability hooks (DESIGN.md §2.15) --------------------------------
+
+    def _wal_append(self, rtype: str, payload: dict) -> None:
+        if self._wal is not None and not self._wal_replaying:
+            self._wal.append(rtype, payload)
+
+    def _wal_config(self) -> dict:
+        return {"codec_name": self.codec_name, "B": self.B,
+                "n_parts": self.n_parts, "n_shards": self.n_shards,
+                "capacity_ints": self.capacity_ints,
+                "varint_tail_below": self.varint_tail_below}
+
+    def _wal_checkpoint(self) -> None:
+        """Commit the full serving state as an atomic snapshot and rotate
+        the WAL.  The mutable segment is part of the snapshot, so rotation
+        never strands an un-sealed add in a discarded epoch."""
+        if self._wal is None or self._wal_replaying:
+            return
+        from repro.index import durability
+        with self._lock:
+            gen, mseg = self._state
+            entries = []
+            for s in sorted(gen.segments, key=lambda s: s.doc_base):
+                if s.file is None:
+                    raise durability.WalError(
+                        f"segment [{s.doc_base},{s.doc_hi}) was never "
+                        f"persisted — cannot checkpoint")
+                entries.append({"base": int(s.doc_base),
+                                "hi": int(s.doc_hi), "file": s.file})
+            self._wal.checkpoint({
+                "config": self._wal_config(),
+                "segments": entries,
+                "mseg_base": mseg.doc_base,
+                "mseg_n_docs": mseg.n_docs,
+                "mseg_postings": mseg.postings,
+                "dead_ids": np.flatnonzero(self._dead[: self._next_id]),
+                "next_doc_id": self._next_id,
+                "vocab": self._vocab,
+                "counters": {"n_seals": self.n_seals,
+                             "n_merges": self.n_merges,
+                             "gen_counter": self._gen_counter},
+            })
 
     # -- segment building / generations ------------------------------------
 
@@ -395,6 +485,11 @@ class MutableIndex:
             postings = self._decode_live(segs, vocab, lo)
             hook("decode")
             merged = self._build_segment(lo, hi - lo, postings)
+            if self._wal is not None:
+                # persist while the postings are in hand; unreferenced
+                # until the swap checkpoint, pinned against pruning, and
+                # a harmless orphan if the merge aborts before it
+                self._wal.persist_segment(merged, postings)
             hook("build")
 
             # stage the candidate generation completely off-lock: carried
@@ -430,15 +525,43 @@ class MutableIndex:
                         carry=cand, pool=cand.pool)
                 self._state = (cand, mseg)
                 self.n_merges += 1
+                self._wal_checkpoint()
             return True
         finally:
             with self._lock:
                 self._merging = False
 
-    def merge_async(self, **kw) -> threading.Thread:
+    def merge_async(self, *, retries: int = 2,
+                    retry_backoff_s: float = 0.05,
+                    max_backoff_s: float = 2.0, **kw) -> threading.Thread:
         """Run ``merge`` on a daemon thread (serving continues lock-free
-        while it compacts); join the returned thread to wait for it."""
-        t = threading.Thread(target=self.merge, kwargs=kw, daemon=True)
+        while it compacts); join the returned thread to wait for it.
+
+        A failed merge never dies silently: the exception is recorded as
+        ``counters()['last_merge_error']`` (cleared on the next success),
+        ``merge_failures`` is bumped, and the merge is retried up to
+        ``retries`` times with capped exponential backoff.  The old
+        generation keeps serving throughout — merge aborts publish
+        nothing, as the stage-crash tests guarantee."""
+        def run():
+            delay = retry_backoff_s
+            for attempt in range(retries + 1):
+                try:
+                    self.merge(**kw)
+                except Exception as e:       # noqa: BLE001 — surfaced below
+                    with self._lock:
+                        self._last_merge_error = f"{type(e).__name__}: {e}"
+                        self._merge_failures += 1
+                    if attempt == retries:
+                        return
+                    time.sleep(delay)
+                    delay = min(delay * 2, max_backoff_s)
+                else:
+                    with self._lock:
+                        self._last_merge_error = None
+                    return
+
+        t = threading.Thread(target=run, daemon=True)
         t.start()
         return t
 
@@ -570,7 +693,6 @@ class MutableIndex:
              ) -> dict:
         """Warm the current generation's signatures (and pools) to the
         fixed point through the same path serving uses."""
-        import time
         t0 = time.perf_counter()
         c0 = batch_lib._compile_count()
         n_sigs, passes, converged = batch_lib.warm_to_fixed_point(
@@ -625,7 +747,9 @@ class MutableIndex:
                 "next_doc_id": self._next_id,
                 "vocab": self._vocab,
                 "n_seals": self.n_seals,
-                "n_merges": self.n_merges}
+                "n_merges": self.n_merges,
+                "last_merge_error": self._last_merge_error,
+                "merge_failures": self._merge_failures}
 
     def stats(self) -> dict:
         gen, _ = self._state

@@ -45,6 +45,35 @@ def coerce_index_flags(args) -> list[str]:
     they got.  Every implied rewrite is now explicit; ``args`` is mutated
     in place so the serving paths read the *effective* values."""
     warnings = []
+    # durability / chaos / live-traffic flags (DESIGN.md §2.15) — resolved
+    # first because --wal can imply --mutate, which the branches below read
+    if getattr(args, "wal", None) and not getattr(args, "mutate", 0):
+        warnings.append("--wal implies the mutable index: --mutate 0 -> 256")
+        args.mutate = 256
+    if getattr(args, "chaos", None) and not getattr(args, "wal", None):
+        warnings.append("--chaos without --wal: durability crash points "
+                        "(wal.*/snapshot.*/merge.*) have no durable "
+                        "directory to recover from — only launch/collect "
+                        "seam faults can fire safely")
+    if (getattr(args, "timeout_ms", None) is not None
+            and not getattr(args, "qps", 0)):
+        warnings.append("--timeout-ms ignored without --qps (offline and "
+                        "drain serving have no per-request deadlines)")
+        args.timeout_ms = None
+    if getattr(args, "qps", 0):
+        if args.pipeline:
+            warnings.append("--pipeline ignored with --qps (the live "
+                            "server bounds in-flight batches itself)")
+            args.pipeline = 0
+        if args.shards:
+            warnings.append("--shards ignored with --qps (use "
+                            "repro.launch.server --shards for live "
+                            "sharded serving)")
+            args.shards = 0
+        if args.batch <= 1:
+            warnings.append(f"--qps implies batched mode: "
+                            f"--batch {args.batch} -> 32")
+            args.batch = 32
     if getattr(args, "mutate", 0):
         if args.batch <= 1:
             warnings.append(f"--mutate implies batched mode: "
@@ -133,6 +162,8 @@ def serve_index(args):
                  "see DESIGN.md §2.12)" if kmode == "interpret" else ""))
     corpus = corpus_lib.synthesize(n_docs=1 << 16, n_queries=args.queries,
                                    seed=5, shared_vocab=args.shared_vocab)
+    if getattr(args, "qps", 0):
+        return serve_index_live(args, corpus)
     if getattr(args, "mutate", 0):
         return serve_index_mutable(args, corpus)
     if args.shards:
@@ -269,6 +300,94 @@ def serve_index(args):
           f"{cache_note()}")
 
 
+def _injector(args):
+    """Build the chaos FaultInjector from --chaos (None when unarmed)."""
+    spec = getattr(args, "chaos", None)
+    if not spec:
+        return None
+    from repro.launch import faults as faults_lib
+    return faults_lib.FaultInjector(spec, seed=getattr(args, "seed", 0) or 0)
+
+
+def _bootstrap_mutable(args, corpus, injector=None):
+    """Shared --mutate bootstrap: build the MutableIndex (WAL-backed when
+    --wal is set), apply the add/seal/delete stream, and — if an injected
+    crash fires mid-mutation — recover from the WAL directory and keep
+    going with the recovered state (DESIGN.md §2.15)."""
+    from repro.index import segments
+    log = None
+    if getattr(args, "wal", None):
+        from repro.index import durability
+        log = durability.DurableLog(args.wal, injector=injector)
+    n_mut = args.mutate
+    del_frac = 0.1 if args.delete_frac is None else args.delete_frac
+    t0 = time.perf_counter()
+    mi = segments.MutableIndex.from_postings(
+        corpus.postings, corpus.n_docs, codec_name=_codec_name(args),
+        B=16, n_parts=2, n_shards=args.shards, wal=log)
+    print(f"[serve] mutable index bootstrapped: {corpus.n_docs} docs "
+          f"sealed in {time.perf_counter() - t0:.2f}s"
+          + (f", {args.shards} shards" if args.shards else "")
+          + (f", WAL at {args.wal}" if log is not None else ""))
+
+    queries = corpus.queries
+    rng = np.random.default_rng(7)
+    term_pool = sorted({t for q in queries for t in q})
+    n_del = int(del_frac * n_mut)
+    crashed = False
+    try:
+        for i in range(n_mut):
+            k = int(rng.integers(1, 4))
+            mi.add(sorted(rng.choice(term_pool, size=k,
+                                     replace=False).tolist()))
+            if n_mut > 1 and i == n_mut // 2:
+                mi.seal()               # live stream: seal mid-mutation
+        if n_del:
+            for d in rng.choice(mi.next_doc_id, size=n_del, replace=False):
+                mi.delete(int(d))
+    except Exception as e:              # noqa: BLE001 — chaos crash path
+        from repro.launch import faults as faults_lib
+        if not isinstance(e, faults_lib.InjectedCrash) or log is None:
+            raise
+        # the injected "process death": everything not yet applied is
+        # lost; recovery replays snapshot + WAL tail and serving resumes
+        print(f"[serve] chaos: {e} — recovering from {args.wal}")
+        crashed = True
+        injector.disarm_all()
+        t0 = time.perf_counter()
+        mi = segments.MutableIndex.recover(args.wal, injector=injector)
+        print(f"[serve] recovered in {time.perf_counter() - t0:.2f}s: "
+              f"replayed {mi._wal_replayed} WAL records, "
+              f"{mi.counters()['n_segments']} segments, "
+              f"{mi.counters()['mutable_docs']} mutable docs")
+    c = mi.counters()
+    stream = (f"crash cut the +{n_mut}/-{n_del} mutation stream short"
+              if crashed else f"+{n_mut} docs / -{n_del} tombstones")
+    print(f"[serve] mutable index: {stream} -> "
+          f"generation {c['generation']}, {c['n_segments']} sealed "
+          f"segments + {c['mutable_docs']} mutable docs, "
+          f"{c['tombstones']} tombstones, {c['n_seals']} seals, "
+          f"vocab {c['vocab']}")
+    return mi, n_del
+
+
+def _recovery_differential(args, mi, queries):
+    """--wal epilogue: recover a second index from the durable directory
+    and assert it answers byte-identically to the live one."""
+    from repro.index import segments
+    t0 = time.perf_counter()
+    ri = segments.MutableIndex.recover(args.wal)
+    dt = time.perf_counter() - t0
+    got = mi.execute_batch(queries, backend=args.backend, fuse=args.fuse)
+    rec = ri.execute_batch(queries, backend=args.backend, fuse=args.fuse)
+    for q, g, r in zip(queries, got, rec):
+        assert g.count == r.count and np.array_equal(g.docs, r.docs), \
+            f"recovery mismatch on {q}"
+    print(f"[serve] recovery check: replayed {ri._wal_replayed} WAL "
+          f"records in {dt:.2f}s; {len(queries)} queries byte-identical "
+          f"to the live index")
+
+
 def serve_index_mutable(args, corpus):
     """--mutate N: live-corpus serving demo over the segmented mutable
     index (DESIGN.md §2.14).
@@ -278,37 +397,15 @@ def serve_index_mutable(args, corpus):
     the signature fixed point, then runs the timed loop *while a
     background merge compacts the sealed segments* — the printed q/s is
     throughput during the merge, and the run ends with a differential
-    check against a rebuild-from-scratch index."""
-    from repro.index import batch as batch_lib, builder, engine, segments
+    check against a rebuild-from-scratch index.  With --wal DIR every
+    mutation is journaled and the run ends with a crash-recovery
+    differential as well (DESIGN.md §2.15)."""
+    from repro.index import batch as batch_lib, builder, engine
+    injector = _injector(args)
     n_mut = args.mutate
     del_frac = 0.1 if args.delete_frac is None else args.delete_frac
-    t0 = time.perf_counter()
-    mi = segments.MutableIndex.from_postings(
-        corpus.postings, corpus.n_docs, codec_name=_codec_name(args),
-        B=16, n_parts=2, n_shards=args.shards)
-    print(f"[serve] mutable index bootstrapped: {corpus.n_docs} docs "
-          f"sealed in {time.perf_counter() - t0:.2f}s"
-          + (f", {args.shards} shards" if args.shards else ""))
-
+    mi, n_del = _bootstrap_mutable(args, corpus, injector)
     queries = corpus.queries
-    rng = np.random.default_rng(7)
-    term_pool = sorted({t for q in queries for t in q})
-    for i in range(n_mut):
-        k = int(rng.integers(1, 4))
-        mi.add(sorted(rng.choice(term_pool, size=k,
-                                 replace=False).tolist()))
-        if n_mut > 1 and i == n_mut // 2:
-            mi.seal()                   # live stream: seal mid-mutation
-    n_del = int(del_frac * n_mut)
-    if n_del:
-        for d in rng.choice(mi.next_doc_id, size=n_del, replace=False):
-            mi.delete(int(d))
-    c = mi.counters()
-    print(f"[serve] mutable index: +{n_mut} docs / -{n_del} tombstones -> "
-          f"generation {c['generation']}, {c['n_segments']} sealed "
-          f"segments + {c['mutable_docs']} mutable docs, "
-          f"{c['tombstones']} tombstones, {c['n_seals']} seals, "
-          f"vocab {c['vocab']}")
 
     def run_all(stats=None):
         stats = {} if stats is None else stats
@@ -332,9 +429,12 @@ def serve_index_mutable(args, corpus):
               "without converging — the timed run may pay hidden compiles")
 
     # timed loop under a live background merge: the candidate generation
-    # pre-warms through the shared sticky plan before the atomic swap
+    # pre-warms through the shared sticky plan before the atomic swap;
+    # --chaos merge.* points fire through the stage hook and exercise the
+    # merge retry path
+    merge_hook = injector.merge_hook() if injector is not None else None
     merge_thread = mi.merge_async(warm_queries=queries,
-                                  backend=args.backend)
+                                  backend=args.backend, hook=merge_hook)
     stats: dict = {}
     t0 = time.perf_counter()
     loops = 0
@@ -356,6 +456,9 @@ def serve_index_mutable(args, corpus):
     print(f"[serve]   post-merge: generation {c['generation']}, "
           f"{c['n_segments']} segments, {c['n_merges']} merges, "
           f"{c['next_doc_id']} doc ids ({c['tombstones']} tombstoned)")
+    if c.get("merge_failures"):
+        print(f"[serve]   merge retries: {c['merge_failures']} failed "
+              f"attempts, last error: {c['last_merge_error'] or 'cleared'}")
 
     # differential: the served state vs a rebuild-from-scratch index
     idx = builder.build(mi.live_postings(), max(mi.next_doc_id, 1),
@@ -367,7 +470,86 @@ def serve_index_mutable(args, corpus):
             np.array_equal(got.docs, want.docs), f"mismatch on {q}"
     print(f"[serve] differential check: {len(queries)} queries "
           f"byte-identical to rebuild-from-scratch")
+    if getattr(args, "wal", None):
+        _recovery_differential(args, mi, queries)
+    if injector is not None:
+        print(f"[serve] chaos: {injector.counts()}")
     return final
+
+
+def serve_index_live(args, corpus):
+    """--qps Q: open-loop live serving through the continuous-batching
+    server (repro.launch.server) with the resilience knobs — per-request
+    deadlines (--timeout-ms), injected faults (--chaos), and a durable
+    mutable corpus (--wal, --mutate).  DESIGN.md §2.11 and §2.15.
+
+    Every submitted request resolves to exactly one of done / shed /
+    timeout / error; the epilogue audits that and, for --mutate, runs the
+    served-results differential against the live index (plus the WAL
+    recovery differential when --wal is set)."""
+    from repro.index import batch as batch_lib, builder, source
+    from repro.launch import server as server_lib
+    injector = _injector(args)
+    queries = corpus.queries
+    kw = dict(backend=args.backend, max_batch=args.batch, fuse=args.fuse,
+              timeout_ms=getattr(args, "timeout_ms", None),
+              injector=injector)
+    mi = idx = None
+    if getattr(args, "mutate", 0):
+        mi, _ = _bootstrap_mutable(args, corpus, injector)
+        kw["mutable"] = mi
+    else:
+        idx = builder.build(corpus.postings, corpus.n_docs,
+                            codec_name=_codec_name(args), B=16, n_parts=2)
+        _print_codec_stats(args, idx)
+        if args.resident:
+            pool = source.ResidentPool()
+            pool.warm(idx)
+            kw["pool"] = pool
+    results, server = server_lib.serve_open_loop(
+        idx, queries, qps=args.qps, warmup=args.warmup,
+        seed=getattr(args, "seed", 0) or 0, **kw)
+    s = server.metrics.summary()
+    outs = server.outcomes()
+    assert len(outs) == len(queries) and "pending" not in outs, \
+        "unresolved requests after run()"  # the zero-lost-requests audit
+    lad = server.ladder
+    print(f"[serve] paper-index --qps {args.qps:g} ({args.backend}"
+          f"{', fused' if args.fuse else ', unfused'}, "
+          f"batch {args.batch}"
+          + (f", timeout {args.timeout_ms:g} ms"
+             if getattr(args, "timeout_ms", None) is not None else "")
+          + f"): {s['n_done']} done / {s['n_shed']} shed / "
+          f"{s['n_timeout']} timed out / {s['n_errors']} errored, "
+          f"{s['qps']:.1f} q/s, p50 {s['p50_ms']:.2f} ms, "
+          f"p99 {s['p99_ms']:.2f} ms")
+    print(f"[serve]   resilience: {s['n_faults']} faults, "
+          f"{s['n_retries']} retries, {s['degraded_flushes']} degraded "
+          f"flushes, {lad.n_degradations} degradations / "
+          f"{lad.n_promotions} promotions, final rung "
+          f"{lad.current[0]}{'+fused' if lad.current[1] else '+unfused'}")
+    if injector is not None:
+        print(f"[serve] chaos: {injector.counts()}")
+    # differential: every answered request must match a clean re-execution
+    # against the same (final) corpus state — degraded or retried flushes
+    # included
+    served = [(q, r) for q, r in zip(queries, results) if r is not None]
+    if served:
+        qs = [q for q, _ in served]
+        if mi is not None:
+            want = mi.execute_batch(qs, backend=args.backend,
+                                    fuse=args.fuse)
+        else:
+            want = batch_lib.execute_batch(idx, qs, backend=args.backend,
+                                           fuse=args.fuse)
+        for (q, got), w in zip(served, want):
+            assert got.count == w.count and \
+                np.array_equal(got.docs, w.docs), f"mismatch on {q}"
+        print(f"[serve] differential check: {len(served)} answered "
+              f"queries byte-identical to direct execution")
+    if mi is not None and getattr(args, "wal", None):
+        _recovery_differential(args, mi, queries)
+    return results
 
 
 def serve_index_sharded(args, corpus):
@@ -545,6 +727,31 @@ def main():
     ap.add_argument("--delete-frac", type=float, default=None, metavar="F",
                     help="paper-index: fraction of --mutate adds to "
                          "tombstone (default 0.1; requires --mutate)")
+    ap.add_argument("--wal", default=None, metavar="DIR",
+                    help="paper-index: durable mutable index — journal "
+                         "every add/delete/seal to a write-ahead log in "
+                         "DIR, checkpoint atomic snapshots, and end the "
+                         "run with a crash-recovery differential "
+                         "(implies --mutate; DESIGN.md §2.15)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="paper-index: deterministic fault injection — "
+                         "comma-separated kind@point[:arg] rules, e.g. "
+                         "'crash@wal.append.add:40' or "
+                         "'transient@launch:0.05' (kinds: crash, torn, "
+                         "transient, error, delay; see "
+                         "repro.launch.faults; DESIGN.md §2.15)")
+    ap.add_argument("--timeout-ms", type=float, default=None, metavar="MS",
+                    help="paper-index: per-request deadline for --qps live "
+                         "serving — requests still queued past the "
+                         "deadline resolve as timed out, never hang")
+    ap.add_argument("--qps", type=float, default=0.0, metavar="Q",
+                    help="paper-index: open-loop live serving at offered "
+                         "load Q through the continuous-batching server "
+                         "(0 = offline batch mode; composes with "
+                         "--mutate/--wal/--chaos/--timeout-ms)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="paper-index: seed for --chaos fault schedules "
+                         "and --qps arrival gaps")
     ap.add_argument("--cache", action="store_true",
                     help="paper-index: serve with a DecodeCache and report "
                          "its hit rate")

@@ -29,6 +29,17 @@ The loop's three policies:
 Every request records time-in-queue and end-to-end latency; ``ServerMetrics``
 reports p50/p99/p999, queue-depth histogram, shed count and measured q/s.
 
+Resilience (DESIGN.md §2.15): every request resolves — exactly one of
+done / shed / timeout / error, never a hung awaiter.  Per-request
+deadlines (``timeout_ms``) expire queued requests at flush assembly;
+transient faults from the schedule/launch seam retry with bounded
+exponential backoff; repeated failures trip a circuit-breaker
+*degradation ladder* that steps fused→unfused and pallas→jax (every rung
+still byte-identical to the sequential oracle — that is the point of the
+differential contract) and re-promotes one rung per quiet cool-down.
+``launch.faults`` injects faults at the ``launch``/``collect`` seams for
+tests and ``--chaos``.
+
   PYTHONPATH=src python -m repro.launch.server --queries 256 --qps 500
   PYTHONPATH=src python -m repro.launch.server --queries 256 --qps 0 \\
       --warmup --check            # drain mode + offline differential
@@ -45,6 +56,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.index import batch as batch_lib
+from repro.launch import faults as faults_lib
 
 
 _STOP = object()
@@ -57,13 +69,17 @@ _STOP = object()
 @dataclass
 class Request:
     """One in-flight query: terms plus the three timestamps the latency
-    report is built from (arrive -> admit -> done)."""
+    report is built from (arrive -> admit -> done).  ``outcome`` is the
+    resolution contract: every admitted request ends in exactly one of
+    ``done`` / ``timeout`` / ``error`` with its ``done`` event set (shed
+    arrivals never become a Request at all)."""
     rid: int
     terms: list
     t_arrive: float
     t_admit: float = 0.0
     t_done: float = 0.0
     result: object = None
+    outcome: str = "pending"
     done: asyncio.Event = field(default_factory=asyncio.Event)
 
     @property
@@ -103,6 +119,11 @@ class ServerMetrics:
         self.flush_drain = 0
         self.aligned_flushes = 0
         self.unaligned_flushes = 0
+        self.n_timeout = 0          # expired per-request deadlines
+        self.n_errors = 0           # requests resolved by a failed flush
+        self.n_faults = 0           # faults observed at the dispatch seams
+        self.n_retries = 0          # transient-fault retry attempts
+        self.degraded_flushes = 0   # flushes served below the top rung
         self.t_first: float | None = None
         self.t_last: float | None = None
 
@@ -142,7 +163,81 @@ class ServerMetrics:
             "flush_drain": self.flush_drain,
             "aligned_flushes": self.aligned_flushes,
             "unaligned_flushes": self.unaligned_flushes,
+            "n_timeout": self.n_timeout,
+            "n_errors": self.n_errors,
+            "n_faults": self.n_faults,
+            "n_retries": self.n_retries,
+            "degraded_flushes": self.degraded_flushes,
         }
+
+
+# --------------------------------------------------------------------------
+# the degradation ladder (circuit breaker)
+# --------------------------------------------------------------------------
+
+class DegradationLadder:
+    """Circuit-breaker over execution modes, cheapest-to-degrade first.
+
+    The rungs are built from the configured (backend, fuse): fused→unfused
+    first (drops the megagroup programs but keeps the backend), then
+    pallas→jax (drops the kernel path entirely).  Every rung is one of the
+    differentially-verified execution modes, so degraded answers remain
+    byte-identical to the sequential oracle — the ladder trades
+    *performance* for survival, never correctness.
+
+    State machine: ``threshold`` consecutive flush failures step one rung
+    down (streak resets); any failure re-arms the cool-down; the first
+    success after a full quiet ``cooldown_s`` steps one rung back up (one
+    promotion per cool-down, so a flapping fault cannot oscillate at full
+    rate).  ``clock`` is injectable for deterministic tests."""
+
+    def __init__(self, backend: str = "jax", fuse: bool = True, *,
+                 threshold: int = 3, cooldown_s: float = 0.5,
+                 clock=time.monotonic):
+        levels = [(backend, fuse)]
+        if fuse:
+            levels.append((backend, False))
+        if backend == "pallas":
+            levels.append(("jax", False))
+        self.levels = levels
+        self.level = 0
+        self.threshold = max(threshold, 1)
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self.fail_streak = 0
+        self.n_degradations = 0
+        self.n_promotions = 0
+        self._quiet_at = clock()       # earliest instant a promotion may fire
+
+    @property
+    def current(self) -> tuple[str, bool]:
+        return self.levels[self.level]
+
+    @property
+    def degraded(self) -> bool:
+        return self.level > 0
+
+    def on_failure(self) -> bool:
+        """Record one failed flush; True if this tripped a degradation."""
+        self.fail_streak += 1
+        self._quiet_at = self.clock() + self.cooldown_s
+        if (self.fail_streak >= self.threshold
+                and self.level < len(self.levels) - 1):
+            self.level += 1
+            self.fail_streak = 0
+            self.n_degradations += 1
+            return True
+        return False
+
+    def on_success(self) -> bool:
+        """Record one successful flush; True if this re-promoted a rung."""
+        self.fail_streak = 0
+        if self.level > 0 and self.clock() >= self._quiet_at:
+            self.level -= 1
+            self.n_promotions += 1
+            self._quiet_at = self.clock() + self.cooldown_s
+            return True
+        return False
 
 
 # --------------------------------------------------------------------------
@@ -214,7 +309,12 @@ class ContinuousBatchingServer:
                  cache=None, pool=None, fuse: bool = True, plan=None,
                  sharded=None, mutable=None, drain: bool = False,
                  stats: dict | None = None,
-                 metrics: ServerMetrics | None = None):
+                 metrics: ServerMetrics | None = None,
+                 timeout_ms: float | None = None,
+                 injector: "faults_lib.FaultInjector | None" = None,
+                 max_retries: int = 3, retry_backoff_ms: float = 5.0,
+                 breaker_threshold: int = 3, cooldown_ms: float = 500.0,
+                 clock=time.monotonic):
         assert max_batch >= 1 and depth >= 1 and max_queue >= 1
         self.index = index
         self.backend = backend
@@ -238,6 +338,15 @@ class ContinuousBatchingServer:
         self.drain = drain
         self.stats: dict = {} if stats is None else stats
         self.metrics = metrics if metrics is not None else ServerMetrics()
+        self.timeout_s = timeout_ms * 1e-3 if timeout_ms else None
+        self.injector = injector
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_ms * 1e-3
+        self.ladder = DegradationLadder(backend, fuse,
+                                        threshold=breaker_threshold,
+                                        cooldown_s=cooldown_ms * 1e-3,
+                                        clock=clock)
+        self.requests: list[Request | None] = []
         self._next_rid = 0
         self._queue: asyncio.Queue | None = None
 
@@ -249,7 +358,10 @@ class ContinuousBatchingServer:
         a concurrent generation swap never splits a batch."""
         return self.mutable.snapshot() if self.mutable is not None else None
 
-    def _schedule(self, chunk, stats, account: bool = True, snap=None):
+    def _schedule(self, chunk, stats, account: bool = True, snap=None,
+                  fuse: bool | None = None):
+        if fuse is None:
+            fuse = self.fuse
         if snap is not None:
             groups = self.mutable.schedule(snap, chunk, stats=stats,
                                            cache=self.cache)
@@ -260,7 +372,7 @@ class ContinuousBatchingServer:
         else:
             groups = batch_lib.schedule(self.index, chunk, cache=self.cache,
                                         stats=stats, pool=self.pool)
-        if self.fuse:
+        if fuse:
             # family-signature admission accounting: does the sticky plan
             # already cover this flush?  Must be read *before* fuse_groups
             # raises ceilings (which would make coverage trivially true).
@@ -273,20 +385,23 @@ class ContinuousBatchingServer:
                                            stats=stats)
         return groups
 
-    def _launch(self, groups, n_queries, stats, snap=None):
+    def _launch(self, groups, n_queries, stats, snap=None,
+                backend: str | None = None):
+        if backend is None:
+            backend = self.backend
         if snap is not None:
             return self.mutable.launch(
-                snap, groups, n_queries, backend=self.backend,
+                snap, groups, n_queries, backend=backend,
                 max_results=self.max_results,
                 max_group_size=self.max_group_size, stats=stats)
         if self.sharded is not None:
             from repro.index import shard as shard_lib
             return shard_lib.launch_groups_sharded(
                 self.sharded, groups, n_queries=n_queries,
-                backend=self.backend, max_results=self.max_results,
+                backend=backend, max_results=self.max_results,
                 max_group_size=self.max_group_size, stats=stats)
         return batch_lib.launch_groups(
-            groups, n_queries=n_queries, backend=self.backend,
+            groups, n_queries=n_queries, backend=backend,
             max_results=self.max_results,
             max_group_size=self.max_group_size, pool=self.pool,
             stats=stats)
@@ -366,13 +481,42 @@ class ContinuousBatchingServer:
         finally:
             collector.shutdown(wait=True)
 
+    def _resolve_error(self, reqs: list[Request]):
+        """A failed flush must still resolve every request it carried:
+        result None, outcome ``error``, done event set.  No fault may
+        leave an awaiter hanging — that is the resolution contract."""
+        now = time.perf_counter()
+        for r in reqs:
+            r.result = None
+            r.t_done = now
+            r.outcome = "error"
+            self.metrics.n_errors += 1
+            r.done.set()
+
     async def _flush(self, reqs: list[Request], reason: str, loop, sem,
                      collector, finishers: list):
         await sem.acquire()             # at most `depth` awaiting collection
+        m = self.metrics
         now = time.perf_counter()
+        if self.timeout_s is not None:
+            # per-request deadlines, enforced at flush assembly: a request
+            # that already waited out its budget in the queue resolves as
+            # an explicit timeout instead of burning a launch slot
+            live = []
+            for r in reqs:
+                if now - r.t_arrive > self.timeout_s:
+                    r.t_admit = r.t_done = now
+                    r.outcome = "timeout"
+                    m.n_timeout += 1
+                    r.done.set()
+                else:
+                    live.append(r)
+            reqs = live
+            if not reqs:
+                sem.release()
+                return
         for r in reqs:
             r.t_admit = now
-        m = self.metrics
         m.n_flushes += 1
         if reason == "full":
             m.flush_full += 1
@@ -380,12 +524,51 @@ class ContinuousBatchingServer:
             m.flush_deadline += 1
         else:
             m.flush_drain += 1
-        snap = self._snapshot()
-        groups = self._schedule([r.terms for r in reqs], self.stats,
-                                snap=snap)
-        pending = self._launch(groups, len(reqs), self.stats, snap=snap)
+
+        backend, fuse = self.ladder.current
+        if self.ladder.degraded:
+            m.degraded_flushes += 1
+        attempt = 0
+        account = True
+        while True:
+            try:
+                if self.injector is not None:
+                    self.injector.fire("launch")
+                snap = self._snapshot()
+                groups = self._schedule([r.terms for r in reqs], self.stats,
+                                        account=account, snap=snap,
+                                        fuse=fuse)
+                pending = self._launch(groups, len(reqs), self.stats,
+                                       snap=snap, backend=backend)
+                break
+            except faults_lib.TransientFault:
+                # bounded retry with exponential backoff; repeated
+                # transients also feed the breaker, so a persistent
+                # "transient" eventually serves from a lower rung
+                m.n_faults += 1
+                account = False
+                self.ladder.on_failure()
+                if attempt >= self.max_retries:
+                    self._resolve_error(reqs)
+                    sem.release()
+                    return
+                attempt += 1
+                m.n_retries += 1
+                await asyncio.sleep(
+                    self.retry_backoff_s * (2 ** (attempt - 1)))
+                backend, fuse = self.ladder.current
+            except Exception:
+                # non-retryable: resolve the batch as errors, trip the
+                # breaker, keep the serving loop alive
+                m.n_faults += 1
+                self.ladder.on_failure()
+                self._resolve_error(reqs)
+                sem.release()
+                return
 
         def collect():
+            if self.injector is not None:
+                self.injector.fire("collect")
             results = batch_lib.collect_batch(pending)
             if snap is not None:
                 results = self.mutable.finalize(
@@ -400,11 +583,21 @@ class ContinuousBatchingServer:
         fut = loop.run_in_executor(collector, collect)
 
         async def finish():
+            err = None
             try:
                 await fut
+            except Exception as e:      # noqa: BLE001 — resolved below
+                err = e
             finally:
                 sem.release()
+            if err is not None:
+                m.n_faults += 1
+                self.ladder.on_failure()
+                self._resolve_error(reqs)
+                return
+            self.ladder.on_success()
             for r in reqs:
+                r.outcome = "done"
                 m.record(r)
                 r.done.set()
 
@@ -434,7 +627,14 @@ class ContinuousBatchingServer:
         await batcher
         if finishers:
             await asyncio.gather(*finishers)
+        self.requests = reqs
         return [r.result if r is not None else None for r in reqs]
+
+    def outcomes(self) -> list[str]:
+        """Per-request resolution of the last ``run``, submission order:
+        ``shed`` / ``done`` / ``timeout`` / ``error`` — auditing that no
+        request ever went unresolved is one list comprehension."""
+        return ["shed" if r is None else r.outcome for r in self.requests]
 
 
 def warm_server(server: ContinuousBatchingServer,
@@ -547,6 +747,13 @@ def main(argv=None):
     ap.add_argument("--check", action="store_true",
                     help="differential: compare every served result "
                          "against offline execute_batch")
+    ap.add_argument("--timeout-ms", type=float, default=None,
+                    help="per-request deadline: a request still queued "
+                         "after this long resolves as an explicit timeout")
+    ap.add_argument("--chaos", type=str, default=None,
+                    help="fault-injection spec, e.g. "
+                         "'transient@launch:0.01,delay@launch:2' "
+                         "(see launch/faults.py)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--shared-vocab", action="store_true")
     args = ap.parse_args(argv)
@@ -554,9 +761,12 @@ def main(argv=None):
     from repro.index import builder, corpus as corpus_lib, source
     corpus = corpus_lib.synthesize(n_docs=1 << 16, n_queries=args.queries,
                                    seed=5, shared_vocab=args.shared_vocab)
+    injector = (faults_lib.FaultInjector(args.chaos, seed=args.seed)
+                if args.chaos else None)
     kw = dict(backend=args.backend, max_batch=args.batch,
               max_wait_ms=args.max_wait_ms, max_queue=args.max_queue,
-              depth=args.depth, fuse=args.fuse)
+              depth=args.depth, fuse=args.fuse,
+              timeout_ms=args.timeout_ms, injector=injector)
     if args.shards:
         sharded = builder.build_sharded(
             corpus.postings, corpus.n_docs, n_shards=args.shards,
@@ -601,6 +811,18 @@ def main(argv=None):
           f"{server.stats.get('n_compiles', 0)} compiles")
     print(f"[server]   queue depth histogram (pow2 buckets): "
           f"{s['queue_depth_hist']}")
+    lad = server.ladder
+    if (s["n_timeout"] or s["n_errors"] or s["n_faults"]
+            or lad.n_degradations or injector is not None):
+        print(f"[server]   resilience: {s['n_timeout']} timed out, "
+              f"{s['n_errors']} errored, {s['n_faults']} faults seen, "
+              f"{s['n_retries']} retries, "
+              f"{s['degraded_flushes']} degraded flushes "
+              f"({lad.n_degradations} degradations / "
+              f"{lad.n_promotions} promotions, final rung "
+              f"{lad.current[0]}{'+fuse' if lad.current[1] else ''})")
+        if injector is not None:
+            print(f"[server]   chaos fired: {injector.counts()}")
     if args.check:
         served = [(q, r) for q, r in zip(corpus.queries, results)
                   if r is not None]

@@ -1,0 +1,302 @@
+"""Durability coverage for the mutable segmented index (DESIGN.md §2.15).
+
+Layers:
+  * WAL framing: append/read roundtrip, and every torn-tail corruption
+    mode (short frame, bad magic, bad CRC, truncated payload) yields the
+    good prefix — never a propagated bad record,
+  * atomic snapshots: manifest-last commit, pruning keeps a bounded
+    number of epochs, referenced segment files survive pruning,
+  * the crash matrix: for EVERY registered crash point (WAL appends, the
+    two snapshot steps, all six merge stages) an injected crash followed
+    by ``MutableIndex.recover`` lands byte-identical to a
+    rebuild-from-scratch oracle of exactly the acknowledged operations,
+  * torn final records at every WAL append point: recovery truncates the
+    partial frame and replays only whole records,
+  * chained crashes (crash → recover → crash → recover) and damaged-
+    manifest fallback to the previous epoch.
+"""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.index import builder, durability, engine, segments
+from repro.launch import faults
+
+pytestmark = [pytest.mark.segments, pytest.mark.faults]
+
+V = 8                       # term universe
+CODEC = "bp-d1"
+B = 16
+
+PROBES = [[t] for t in range(0, V, 2)] + [[0, 1], [2, 3], [1, 4, 5]]
+
+
+def _base_model(n_docs=40, seed=3):
+    """A small corpus as an explicit {doc: terms} model + postings."""
+    rng = np.random.default_rng(seed)
+    model = {d: set(map(int, rng.choice(V, size=2, replace=False)))
+             for d in range(n_docs)}
+    post = [np.asarray(sorted(d for d, ts in model.items() if t in ts),
+                       dtype=np.int64) for t in range(V)]
+    return model, post
+
+
+def _boot(directory, injector=None, n_docs=40):
+    model, post = _base_model(n_docs)
+    log = durability.DurableLog(directory, injector=injector)
+    mi = segments.MutableIndex.from_postings(
+        post, n_docs, codec_name=CODEC, B=B, n_parts=2, wal=log)
+    return mi, model
+
+
+def _assert_matches_model(mi, model, *, backend="jax", fuse=True):
+    """The recovered index answers exactly like a rebuild of the model."""
+    idx = builder.build(
+        [np.asarray(sorted(d for d, ts in model.items() if t in ts),
+                    dtype=np.int64) for t in range(V)],
+        max(mi.next_doc_id, 1), codec_name=CODEC, B=B, n_parts=2)
+    got = mi.execute_batch([list(q) for q in PROBES], backend=backend,
+                           fuse=fuse)
+    for q, g in zip(PROBES, got):
+        w = engine.query(idx, list(q))
+        assert g.count == w.count, (q, g.count, w.count)
+        assert np.array_equal(g.docs, w.docs), (q, g.docs, w.docs)
+
+
+def _drive(mi, model, injector=None, n=24):
+    """A scripted add/seal/delete/merge stream that touches every crash
+    point at least once; the model records only *acknowledged* ops (an
+    injected crash propagates before the model updates — exactly the
+    contract recovery must honour)."""
+    rng = np.random.default_rng(11)
+    for i in range(n):
+        terms = sorted(map(int, rng.choice(V, size=2, replace=False)))
+        d = mi.add(terms)
+        model[d] = set(terms)
+        if i % 8 == 5:
+            live = sorted(model)
+            victim = live[i % len(live)]
+            mi.delete(victim)
+            del model[victim]
+        if i % 7 == 6:
+            mi.seal()
+    hook = injector.merge_hook() if injector is not None else None
+    mi.merge(hook=hook)
+
+
+# --------------------------------------------------------------------------
+# WAL framing
+# --------------------------------------------------------------------------
+
+def test_wal_append_read_roundtrip(tmp_path):
+    log = durability.DurableLog(str(tmp_path))
+    log.start_fresh()
+    log._attach(0)                               # open epoch 0 sans manifest
+    recs = [("add", {"terms": [1, 2]}), ("delete", {"doc": 7}),
+            ("seal", {}), ("add", {"terms": [0]})]
+    for rtype, payload in recs:
+        log.append(rtype, payload)
+    log.close()
+    got, good, torn = durability.read_wal(log.wal_path(0))
+    assert not torn
+    assert good == os.path.getsize(log.wal_path(0))
+    assert got == recs
+
+
+@pytest.mark.parametrize("damage", ["short_header", "short_payload",
+                                    "bad_magic", "bad_crc", "garbage"])
+def test_wal_torn_tail_truncates_not_propagates(tmp_path, damage):
+    log = durability.DurableLog(str(tmp_path))
+    log.start_fresh()
+    log._attach(0)
+    recs = [("add", {"terms": [i]}) for i in range(5)]
+    for rtype, payload in recs:
+        log.append(rtype, payload)
+    log.close()
+    path = log.wal_path(0)
+    clean = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        if damage == "short_header":
+            f.seek(0, os.SEEK_END)
+            f.write(b"WA\x01")                   # header cut mid-field
+        elif damage == "short_payload":
+            frame = struct.pack("<2sBII", b"WA", 1, 100, 0)
+            f.seek(0, os.SEEK_END)
+            f.write(frame + b"{}")               # promises 100, delivers 2
+        elif damage == "bad_magic":
+            f.seek(0, os.SEEK_END)
+            f.write(b"XX" + b"\x00" * 20)
+        elif damage == "bad_crc":
+            body = json.dumps({"terms": [9]}).encode()
+            frame = struct.pack("<2sBII", b"WA", 1, len(body), 12345) + body
+            f.seek(0, os.SEEK_END)
+            f.write(frame)
+        else:
+            f.seek(0, os.SEEK_END)
+            f.write(os.urandom(17))
+    got, good, torn = durability.read_wal(path)
+    assert torn and good == clean
+    assert got == recs                           # the good prefix, exactly
+
+
+def test_start_fresh_refuses_nonempty_directory(tmp_path):
+    log = durability.DurableLog(str(tmp_path))
+    log.start_fresh()
+    log.checkpoint({"config": {}, "segments": [], "mseg_base": 0,
+                    "mseg_n_docs": 0, "mseg_postings": {}, "dead_ids": [],
+                    "next_doc_id": 0, "vocab": 0, "counters": {}})
+    log.close()
+    with pytest.raises(durability.WalError):
+        durability.DurableLog(str(tmp_path)).start_fresh()
+
+
+# --------------------------------------------------------------------------
+# snapshots: pruning + recovery on clean shutdown
+# --------------------------------------------------------------------------
+
+def test_clean_recover_is_byte_identical(tmp_path):
+    mi, model = _boot(str(tmp_path))
+    _drive(mi, model)
+    rec = segments.MutableIndex.recover(str(tmp_path))
+    _assert_matches_model(rec, model)
+    got = mi.execute_batch([list(q) for q in PROBES])
+    rgt = rec.execute_batch([list(q) for q in PROBES])
+    for g, r in zip(got, rgt):
+        assert g.count == r.count and np.array_equal(g.docs, r.docs)
+    c, rc = mi.counters(), rec.counters()
+    assert rc["next_doc_id"] == c["next_doc_id"]
+    assert rc["tombstones"] == c["tombstones"]
+    assert rc["vocab"] == c["vocab"]
+
+
+def test_recover_twice_is_idempotent(tmp_path):
+    mi, model = _boot(str(tmp_path))
+    _drive(mi, model, n=12)
+    r1 = segments.MutableIndex.recover(str(tmp_path))
+    r2 = segments.MutableIndex.recover(str(tmp_path))
+    a = r1.execute_batch([list(q) for q in PROBES])
+    b = r2.execute_batch([list(q) for q in PROBES])
+    for g, r in zip(a, b):
+        assert g.count == r.count and np.array_equal(g.docs, r.docs)
+    assert r1.counters()["next_doc_id"] == r2.counters()["next_doc_id"]
+
+
+def test_prune_keeps_bounded_epochs_and_referenced_segments(tmp_path):
+    mi, model = _boot(str(tmp_path))
+    for r in range(5):                          # 5 checkpoint-bearing seals
+        d = mi.add([r % V])
+        model[d] = {r % V}
+        mi.seal()
+    seqs = durability.manifest_seqs(str(tmp_path))
+    assert len(seqs) == 2                       # keep=2 epochs survive
+    man = durability._load_manifest(str(tmp_path), max(seqs))
+    for entry in man["segments"]:               # every referenced file exists
+        assert os.path.exists(os.path.join(str(tmp_path), "segments",
+                                           entry["file"]))
+    assert not [f for f in os.listdir(str(tmp_path)) if f.endswith(".tmp")]
+    _assert_matches_model(segments.MutableIndex.recover(str(tmp_path)),
+                          model)
+
+
+# --------------------------------------------------------------------------
+# the crash matrix: every registered point, crash → recover → differential
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("point", faults.CRASH_POINTS)
+def test_crash_recover_differential(tmp_path, point):
+    inj = faults.FaultInjector(seed=1)
+    mi, model = _boot(str(tmp_path), injector=inj)
+    inj.arm("crash", point, 1)                  # counted from arm time:
+    with pytest.raises(faults.InjectedCrash):   # next hit is the crash
+        _drive(mi, model, injector=inj)
+    assert inj.fired
+    inj.disarm_all()
+    rec = segments.MutableIndex.recover(str(tmp_path))
+    _assert_matches_model(rec, model)
+
+
+@pytest.mark.parametrize("point", faults.TEAR_POINTS)
+def test_torn_record_recover_differential(tmp_path, point):
+    """A torn final record (partial frame on disk) must be truncated by
+    recovery, and the acknowledged prefix must replay exactly."""
+    inj = faults.FaultInjector(seed=2)
+    mi, model = _boot(str(tmp_path), injector=inj)
+    inj.arm("torn", point, 1)
+    with pytest.raises(faults.InjectedCrash):
+        _drive(mi, model, injector=inj)
+    inj.disarm_all()
+    # the torn bytes really are on disk before recovery truncates them
+    wal = max(f for f in os.listdir(str(tmp_path)) if f.startswith("wal-"))
+    _, good, torn = durability.read_wal(os.path.join(str(tmp_path), wal))
+    assert torn
+    rec = segments.MutableIndex.recover(str(tmp_path))
+    _assert_matches_model(rec, model)
+
+
+@pytest.mark.parametrize("backend,fuse", [("jax", False), ("pallas", True),
+                                          ("pallas", False)])
+def test_crash_recover_differential_backends(tmp_path, backend, fuse):
+    """The recovered state answers identically across the backend ×
+    fusion matrix (the primary jax-fused cell runs per-point above)."""
+    inj = faults.FaultInjector(seed=3)
+    mi, model = _boot(str(tmp_path), injector=inj)
+    inj.arm("crash", "wal.append.add", 3)
+    with pytest.raises(faults.InjectedCrash):
+        _drive(mi, model, injector=inj)
+    inj.disarm_all()
+    rec = segments.MutableIndex.recover(str(tmp_path))
+    _assert_matches_model(rec, model, backend=backend, fuse=fuse)
+
+
+def test_crash_recover_crash_chain(tmp_path):
+    """Two process deaths with recovery between them: the second recovery
+    must still land on exactly the acknowledged state."""
+    inj = faults.FaultInjector(seed=4)
+    mi, model = _boot(str(tmp_path), injector=inj)
+    inj.arm("crash", "wal.append.add", 4)
+    with pytest.raises(faults.InjectedCrash):
+        _drive(mi, model, injector=inj)
+    inj.disarm_all()
+    mi = segments.MutableIndex.recover(str(tmp_path), injector=inj)
+    inj.arm("crash", "snapshot.rename", 1)
+    with pytest.raises(faults.InjectedCrash):
+        _drive(mi, model, injector=inj)
+    inj.disarm_all()
+    rec = segments.MutableIndex.recover(str(tmp_path))
+    _assert_matches_model(rec, model)
+    assert rec._wal_replayed >= 0
+
+
+def test_damaged_manifest_falls_back_to_previous_epoch(tmp_path):
+    """Garbage in the newest manifest (a crash the rename should prevent,
+    or disk rot) must not strand the directory: recovery falls back to
+    the previous epoch and replays forward through the chained WALs."""
+    mi, model = _boot(str(tmp_path))
+    _drive(mi, model, n=16)
+    seqs = durability.manifest_seqs(str(tmp_path))
+    assert len(seqs) >= 2
+    newest = os.path.join(str(tmp_path), f"manifest-{max(seqs)}.json")
+    with open(newest, "w") as f:
+        f.write("{ not json")
+    rec = segments.MutableIndex.recover(str(tmp_path))
+    _assert_matches_model(rec, model)
+
+
+def test_recovered_index_keeps_serving_and_checkpointing(tmp_path):
+    """Recovery is not a terminal state: the recovered index accepts new
+    mutations, seals, merges, and survives another recovery."""
+    inj = faults.FaultInjector(seed=5)
+    mi, model = _boot(str(tmp_path), injector=inj)
+    inj.arm("crash", "merge.swap", 1)
+    with pytest.raises(faults.InjectedCrash):
+        _drive(mi, model, injector=inj)
+    inj.disarm_all()
+    mi = segments.MutableIndex.recover(str(tmp_path))
+    _drive(mi, model, n=10)                     # keep mutating post-recovery
+    _assert_matches_model(mi, model)
+    _assert_matches_model(segments.MutableIndex.recover(str(tmp_path)),
+                          model)

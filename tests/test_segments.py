@@ -326,3 +326,46 @@ def test_sharded_lifecycle_matches_oracle():
     _assert_identical(mi, model)
     assert mi.merge() is True
     _assert_identical(mi, model, backend="pallas", fuse=False)
+
+
+# -- merge_async failure surfacing (DESIGN.md §2.15) ------------------------
+
+def test_merge_async_retries_and_clears_error():
+    """A crash injected into the first attempt via the stage hook: the
+    failure is surfaced in ``counters()`` (never a silent dead thread),
+    the capped backoff retries, and the eventual success clears it."""
+    mi, model = _mutated_index()
+    crashed = []
+
+    def hook(stage):
+        if stage == "build" and not crashed:
+            crashed.append(1)
+            raise _Crash("build")
+
+    t = mi.merge_async(hook=hook, retries=2, retry_backoff_s=0.01)
+    t.join(timeout=120)
+    assert not t.is_alive()
+    c = mi.counters()
+    assert c["n_merges"] == 1                   # the retry landed the merge
+    assert c["merge_failures"] == 1
+    assert c["last_merge_error"] is None        # success clears the error
+    _assert_identical(mi, model)
+
+
+def test_merge_async_exhausted_retries_surface_error():
+    """Every attempt fails: the last error string stays visible in
+    ``counters()``, nothing publishes, and the old generation serves."""
+    mi, model = _mutated_index()
+
+    def hook(stage):
+        if stage == "decode":
+            raise _Crash("decode stage down")
+
+    t = mi.merge_async(hook=hook, retries=1, retry_backoff_s=0.01)
+    t.join(timeout=120)
+    c = mi.counters()
+    assert c["n_merges"] == 0                   # nothing ever published
+    assert c["merge_failures"] == 2             # initial attempt + 1 retry
+    assert "_Crash" in c["last_merge_error"]
+    assert "decode stage down" in c["last_merge_error"]
+    _assert_identical(mi, model)

@@ -15,12 +15,15 @@ fallback engine in ``_hypothesis_compat`` runs the same properties from
 ``REPRO_PROP_SEED``.
 """
 
+import tempfile
+
 import numpy as np
 import pytest
 
 from _hypothesis_compat import (HAVE_HYPOTHESIS, HealthCheck, given,
                                 settings, st)
-from repro.index import builder, engine, segments
+from repro.index import builder, durability, engine, segments
+from repro.launch import faults
 
 pytestmark = pytest.mark.segments
 
@@ -50,6 +53,27 @@ OPS = st.lists(
 
 PROBES = ([[t] for t in range(V)]
           + [[0, 1], [2, 3], [1, 4, 5], [0, 1, 2], [3, 5]])
+
+# durable-harness alphabet additions: a crash op arms one registered
+# fault (any crash point, or a torn WAL tail), drives an op stream at it,
+# then recovers from the WAL directory — the model keeps only
+# acknowledged ops, so recovery must land exactly on it
+FAULTS = ([("crash", p) for p in faults.CRASH_POINTS]
+          + [("torn", p) for p in faults.TEAR_POINTS])
+
+OPS_CRASH = st.lists(
+    st.one_of(
+        st.tuples(st.just("add"), _term_set()),
+        st.tuples(st.just("add"), _term_set()),
+        st.tuples(st.just("add"), _term_set()),
+        st.tuples(st.just("delete"), st.integers(0, 1 << 20)),
+        st.tuples(st.just("query"), _term_set()),
+        st.tuples(st.just("seal"), st.just(0)),
+        st.tuples(st.just("merge"), st.just(0)),
+        st.tuples(st.just("crash"), st.integers(0, 1 << 20)),
+        st.tuples(st.just("crash"), st.integers(0, 1 << 20)),
+    ),
+    min_size=6, max_size=24)
 
 
 def _oracle(model: dict, n_docs: int):
@@ -102,6 +126,67 @@ def _run_sequence(ops, *, backend: str, fuse: bool, n_shards: int):
     assert c["tombstones"] >= 0 and c["n_segments"] >= 0
 
 
+def _run_sequence_durable(ops, *, backend: str, fuse: bool):
+    """The durable variant: every op journals through a WAL; a ``crash``
+    op arms one registered fault (crash point or torn WAL tail), drives a
+    short aimed burst at it, and — if the fault fired — recovers from the
+    directory and continues the sequence on the recovered index.  The
+    model tracks only acknowledged ops, so the post-recovery differential
+    *is* the durability contract."""
+    with tempfile.TemporaryDirectory() as wal_dir:
+        injector = faults.FaultInjector(seed=0)
+        log = durability.DurableLog(wal_dir, injector=injector)
+        mi = segments.MutableIndex(codec_name=CODEC, B=B, n_parts=2,
+                                   wal=log)
+        model: dict[int, set] = {}
+        n_adds = 0
+        for op, arg in ops:
+            if op == "add":
+                gid = mi.add(sorted(arg))
+                model[gid] = set(arg)
+                n_adds += 1
+            elif op == "delete":
+                live = sorted(model)
+                if live:
+                    d = live[arg % len(live)]
+                    assert mi.delete(d)
+                    del model[d]
+            elif op == "query":
+                _check(mi, model, [sorted(arg)], backend=backend,
+                       fuse=fuse)
+            elif op == "seal":
+                mi.seal()
+            elif op == "merge":
+                mi.merge()
+            elif op == "crash":
+                kind, point = FAULTS[arg % len(FAULTS)]
+                injector.arm(kind, point, 1)
+                try:
+                    # the aimed burst: adds, a delete, a checkpointing
+                    # seal, and a hooked merge reach every armed point
+                    for t in range(V):
+                        gid = mi.add([t])
+                        model[gid] = {t}
+                        n_adds += 1
+                    live = sorted(model)
+                    victim = live[arg % len(live)]
+                    if mi.delete(victim):
+                        del model[victim]
+                    mi.seal()
+                    mi.merge(hook=injector.merge_hook())
+                except faults.InjectedCrash:
+                    injector.disarm_all()
+                    mi = segments.MutableIndex.recover(wal_dir,
+                                                       injector=injector)
+                else:
+                    # point unreachable from this state (e.g. a merge
+                    # stage with nothing to compact): drop the rule so it
+                    # cannot fire later at an untracked moment
+                    injector.disarm_all()
+        _check(mi, model, PROBES, backend=backend, fuse=fuse)
+        assert mi.counters()["next_doc_id"] == n_adds
+
+
 @settings(max_examples=15, deadline=None,
           suppress_health_check=[HealthCheck.too_slow])
 @given(ops=OPS)
@@ -127,6 +212,31 @@ def test_op_sequences_differential_matrix(backend, fuse, n_shards, ops):
     """The remaining {backend} × {fusion} × {shards} cells: same property,
     fewer examples per cell (the full cross runs every CI push)."""
     _run_sequence(ops, backend=backend, fuse=fuse, n_shards=n_shards)
+
+
+@pytest.mark.faults
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=OPS_CRASH)
+def test_op_sequences_crash_recover_primary(ops):
+    """The durable alphabet on the primary configuration: after any
+    injected crash/torn-tail, ``recover()`` must land byte-identical to
+    the rebuild oracle of the acknowledged ops."""
+    _run_sequence_durable(ops, backend="jax", fuse=True)
+
+
+@pytest.mark.faults
+@pytest.mark.parametrize("backend,fuse", [
+    ("jax", False),
+    ("pallas", True),
+    ("pallas", False),
+], ids=lambda v: str(v))
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=OPS_CRASH)
+def test_op_sequences_crash_recover_matrix(backend, fuse, ops):
+    """The remaining {backend} × {fusion} cells of the durable property."""
+    _run_sequence_durable(ops, backend=backend, fuse=fuse)
 
 
 def test_harness_engine_present():

@@ -13,7 +13,8 @@ from repro.launch.serve import coerce_index_flags
 def _ns(**kw):
     base = dict(batch=0, pipeline=0, shards=0, resident=False, fuse=True,
                 warmup=False, cache=False, queries=20, backend="jax",
-                shared_vocab=False, tokens=16, mutate=0, delete_frac=None)
+                shared_vocab=False, tokens=16, mutate=0, delete_frac=None,
+                wal=None, chaos=None, timeout_ms=None, qps=0.0, seed=0)
     base.update(kw)
     return argparse.Namespace(**base)
 
@@ -110,3 +111,60 @@ def test_mutate_composes_with_shards_unwarned():
     a = _ns(mutate=100, batch=16, resident=True, shards=2)
     assert coerce_index_flags(a) == []
     assert a.pipeline == 0 and a.shards == 2
+
+
+# -- durability / chaos / live-traffic coercions (DESIGN.md §2.15) ----------
+
+def test_wal_implies_mutate():
+    a = _ns(wal="/tmp/w", batch=16, resident=True)
+    w = coerce_index_flags(a)
+    assert a.mutate == 256
+    assert any("--wal implies" in m for m in w)
+
+
+def test_wal_with_explicit_mutate_silent():
+    a = _ns(wal="/tmp/w", mutate=64, batch=16, resident=True)
+    assert coerce_index_flags(a) == []
+    assert a.mutate == 64
+
+
+def test_chaos_without_wal_warns_but_keeps_spec():
+    a = _ns(chaos="transient@launch:0.1", batch=8)
+    w = coerce_index_flags(a)
+    assert a.chaos == "transient@launch:0.1"    # seam faults still valid
+    assert len(w) == 1 and "--chaos without --wal" in w[0]
+
+
+def test_chaos_with_wal_unwarned():
+    a = _ns(chaos="crash@wal.append.add:5", wal="/tmp/w", mutate=64,
+            batch=16, resident=True)
+    assert coerce_index_flags(a) == []
+
+
+def test_timeout_without_qps_warns_and_clears():
+    a = _ns(timeout_ms=50.0, batch=8)
+    w = coerce_index_flags(a)
+    assert a.timeout_ms is None
+    assert len(w) == 1 and "--timeout-ms" in w[0]
+
+
+def test_timeout_with_qps_kept():
+    a = _ns(timeout_ms=50.0, qps=500.0, batch=16)
+    assert coerce_index_flags(a) == []
+    assert a.timeout_ms == 50.0
+
+
+def test_qps_coerces_batch_and_drops_pipeline_and_shards():
+    a = _ns(qps=500.0, pipeline=2, shards=2)
+    w = coerce_index_flags(a)
+    assert a.batch == 32 and a.pipeline == 0 and a.shards == 0
+    assert len(w) == 3
+    assert any("--pipeline" in m for m in w)
+    assert any("--shards" in m for m in w)
+    assert any("--batch" in m for m in w)
+
+
+def test_qps_mutate_with_explicit_flags_silent():
+    a = _ns(qps=500.0, mutate=64, batch=16, resident=True,
+            timeout_ms=100.0)
+    assert coerce_index_flags(a) == []

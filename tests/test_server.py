@@ -399,3 +399,39 @@ def test_server_mutable_sharded_matches_offline(n_shards):
         None, corpus.queries, qps=0.0, mutable=mi, max_batch=4)
     offline = mi.execute_batch(corpus.queries)
     _assert_identical(results, offline)
+
+
+# --------------------------------------------------------------------------
+# resolution audit (DESIGN.md §2.15): no request ever goes unresolved
+# --------------------------------------------------------------------------
+
+def test_server_every_request_resolves_with_explicit_outcome(uniform):
+    """Shed, timed-out and served requests all finish with their ``done``
+    event set and an explicit entry in ``outcomes()`` — no awaiter can
+    hang, drain mode included.  Here the queue bound sheds most of the
+    stream and a microscopic deadline expires the admitted rest."""
+    idx, queries, _ = uniform
+    many = queries * 4
+    srv = server_lib.ContinuousBatchingServer(
+        idx, max_batch=4, max_queue=4, timeout_ms=1e-4)
+    results = asyncio.run(srv.run(many, [0.0] * len(many)))
+    outs = srv.outcomes()
+    assert len(outs) == len(many)
+    assert "pending" not in outs
+    assert outs.count("shed") == len(many) - 4
+    assert outs.count("timeout") == 4           # every admitted one expired
+    assert all(r is None for r in results)
+    assert all(r is None or r.done.is_set() for r in srv.requests)
+    s = srv.metrics.summary()
+    assert s["n_timeout"] == 4 and s["n_shed"] == len(many) - 4
+
+
+def test_server_generous_timeout_serves_everything(uniform):
+    """A deadline far above service time must change nothing: all done,
+    byte-identical, zero timeout outcomes."""
+    idx, queries, seq = uniform
+    results, srv = server_lib.serve_open_loop(
+        idx, queries, qps=0.0, max_batch=4, timeout_ms=60_000.0)
+    assert srv.outcomes() == ["done"] * len(queries)
+    assert srv.metrics.n_timeout == 0
+    _assert_identical(results, seq)
